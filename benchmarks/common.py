@@ -1,0 +1,37 @@
+"""Shared benchmark utilities (timing, data, CSV emission)."""
+from __future__ import annotations
+
+import sys
+import time
+from typing import Callable
+
+import numpy as np
+
+sys.path.insert(0, "src")
+
+# container-scale workload (paper: 100K×1K; see configs/paper_hpo.py —
+# aspect ratio and GFLOP accounting preserved, rows scaled for 1 core)
+ROWS, COLS = 20_000, 256
+SPARSITY = 0.1
+
+
+def timed(fn: Callable, repeats: int = 3, warmup: int = 0) -> float:
+    """Median wall-clock seconds (paper reports mean of 3; median is
+    steadier on a shared core)."""
+    for _ in range(warmup):
+        fn()
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def emit(name: str, seconds: float, derived: str = "") -> None:
+    print(f"{name},{seconds*1e6:.1f},{derived}")
+
+
+def gflop_per_model(rows: int = ROWS, cols: int = COLS) -> float:
+    """lmDS main computation: X^T X + X^T y (paper: 100.2 GFLOP)."""
+    return (2 * rows * cols * cols + 2 * rows * cols) / 1e9

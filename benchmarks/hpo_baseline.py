@@ -1,0 +1,39 @@
+"""Fig. 5(a,b): HPO baseline — k lmDS models, dense and sparse, NO reuse.
+
+The paper's workload: read CSV, train k regression models with different
+λ, write models. X^T X / X^T y are recomputed per model (this is the
+TF/Julia-equivalent baseline; Fig 5(c) adds reuse).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import COLS, ROWS, SPARSITY, emit, gflop_per_model, timed
+
+
+def run_hpo(x: np.ndarray, y: np.ndarray, k: int, reuse: bool) -> dict:
+    from repro.core import LineageRuntime, ReuseCache, input_tensor
+    from repro.lifecycle import grid_search_lm
+    rt = LineageRuntime(cache=ReuseCache() if reuse else None)
+    X = input_tensor("X", x)
+    Y = input_tensor("y", y)
+    lambdas = np.logspace(-2, 2, k).tolist()
+    betas, losses = grid_search_lm(X, Y, lambdas, runtime=rt)
+    return {"betas": betas, "stats": rt.stats, "cache": rt.cache}
+
+
+def main(ks=(1, 5, 10, 20), rows=ROWS, cols=COLS) -> None:
+    from repro.data.synthetic import gen_regression
+    for sparse in (False, True):
+        sp = SPARSITY if sparse else 1.0
+        x, y, _ = gen_regression(rows, cols, sparsity=sp, seed=7)
+        tag = "sparse" if sparse else "dense"
+        for k in ks:
+            t = timed(lambda: run_hpo(x, y, k, reuse=False), repeats=2,
+                      warmup=1)
+            emit(f"fig5_hpo_baseline_{tag}_k{k}", t,
+                 f"gflop={k * gflop_per_model(rows, cols):.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Fig. 5(c,d) + Fig. 6: HPO with lineage-based reuse of intermediates.
+
+Measures end-to-end time with/without the reuse cache as k grows, and
+the input-size sweep (Fig 5d): the larger X, the larger the speedup,
+because the reused X^T X / X^T y are the only row-count-dependent ops.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import COLS, ROWS, SPARSITY, emit, timed
+from .hpo_baseline import run_hpo
+
+
+def main(ks=(1, 5, 10, 20), rows=ROWS, cols=COLS) -> None:
+    from repro.data.synthetic import gen_regression
+    x, y, _ = gen_regression(rows, cols, sparsity=1.0, seed=7)
+
+    base_times = {}
+    for k in ks:
+        t_no = timed(lambda: run_hpo(x, y, k, reuse=False), repeats=2,
+                     warmup=1)
+        t_yes = timed(lambda: run_hpo(x, y, k, reuse=True), repeats=2,
+                      warmup=1)
+        base_times[k] = (t_no, t_yes)
+        emit(f"fig5c_hpo_reuse_k{k}", t_yes,
+             f"no_reuse_us={t_no*1e6:.1f};speedup={t_no/t_yes:.2f}x")
+
+    # Fig 5(d): size sweep at fixed k — speedup grows with rows
+    k = max(ks)
+    for r in (rows // 4, rows // 2, rows):
+        xs, ys_, _ = gen_regression(r, cols, sparsity=SPARSITY, seed=8)
+        t_no = timed(lambda: run_hpo(xs, ys_, k, reuse=False), repeats=2,
+                     warmup=1)
+        t_yes = timed(lambda: run_hpo(xs, ys_, k, reuse=True), repeats=2,
+                      warmup=1)
+        emit(f"fig5d_hpo_reuse_rows{r}", t_yes,
+             f"no_reuse_us={t_no*1e6:.1f};speedup={t_no/t_yes:.2f}x")
+
+    # correctness guard: reuse changes nothing numerically
+    b_no = run_hpo(x, y, 4, reuse=False)["betas"]
+    b_yes = run_hpo(x, y, 4, reuse=True)["betas"]
+    assert np.allclose(b_no, b_yes, rtol=1e-8), "reuse changed results!"
+
+
+if __name__ == "__main__":
+    main()

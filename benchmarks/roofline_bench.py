@@ -1,0 +1,37 @@
+"""Roofline table: reads the dry-run sweep JSON (results/dryrun*.json)
+and emits one CSV row per (arch × shape × mesh) cell."""
+from __future__ import annotations
+
+import json
+import os
+
+from .common import emit
+
+RESULTS = ("results/dryrun_hints.json", "results/dryrun_baseline.json")
+
+
+def main() -> None:
+    found = False
+    for path in RESULTS:
+        if not os.path.exists(path):
+            continue
+        found = True
+        data = json.load(open(path))
+        for c in data["cells"]:
+            t_step = max(c["t_compute"], c["t_memory"], c["t_collective"])
+            emit(f"roofline_{c['arch']}_{c['shape']}_{c['mesh']}", t_step,
+                 f"bound={c['bottleneck']};comp_ms={c['t_compute']*1e3:.2f};"
+                 f"mem_ms={c['t_memory']*1e3:.2f};"
+                 f"coll_ms={c['t_collective']*1e3:.2f};"
+                 f"model_hlo={c['flops_ratio']:.3f};"
+                 f"roofline={c['roofline_fraction']*100:.1f}%")
+        for s in data.get("skips", []):
+            print(f"# SKIP {s['cell']}: {s['reason']}")
+    if not found:
+        print("# no dry-run results found — run: "
+              "PYTHONPATH=src python -m repro.launch.dryrun --all --hints "
+              "--out results/dryrun_hints.json")
+
+
+if __name__ == "__main__":
+    main()

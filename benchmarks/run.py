@@ -1,0 +1,32 @@
+"""Benchmark driver. One module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines.
+
+  fig5_hpo_baseline_*   — Fig. 5(a,b): k lmDS models, dense/sparse, no reuse
+  fig5c/fig5d_*         — Fig. 5(c,d) + Fig. 6: lineage reuse speedups
+  fig7_cv_*             — Fig. 7: cross-validation partial reuse
+  ex2_fed_*             — §4.3 Example 2: federated MV/VM/gram + lmDS
+  gram_*                — §5.2 kernel trio (dense XLA / BLAS / sparse)
+  roofline_*            — §Roofline cells from the dry-run sweep
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+
+def main() -> None:
+    from benchmarks import (cv_reuse, federated_bench, hpo_baseline,
+                            hpo_reuse, kernel_bench, roofline_bench)
+    quick = "--quick" in sys.argv
+    ks = (1, 5, 10) if quick else (1, 5, 10, 20)
+    print("name,us_per_call,derived")
+    hpo_baseline.main(ks=ks)
+    hpo_reuse.main(ks=ks)
+    cv_reuse.main(folds=(4,) if quick else (4, 8))
+    federated_bench.main()
+    kernel_bench.main()
+    roofline_bench.main()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Federated ML demo (paper §4.3): enterprise sites keep their data,
+exchange only aggregates.
+
+  1. federated closed-form regression (Example 2's MV/VM/gram push-down)
+  2. FedAvg mini-batch training of a small LM head across 4 sites with
+     int8-compressed parameter deltas (the cross-pod schedule of
+     distributed/fedavg).
+
+    PYTHONPATH=src python examples/federated_lm.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+
+def main():
+    import jax.numpy as jnp
+    from repro.core.federated import FederatedTensor, federated_lmds
+    from repro.data.synthetic import gen_regression
+    from repro.distributed.fedavg import FedAvgTrainer
+
+    # -- 1. federated linear algebra -------------------------------------
+    x, y, beta_true = gen_regression(8000, 64, seed=1)
+    fed = FederatedTensor.partition_rows(x, n_sites=4)
+    beta = federated_lmds(fed, y, reg=1e-6)
+    ref = np.linalg.solve(x.T @ x + 1e-6 * np.eye(64), x.T @ y)
+    print(f"federated lmDS: max err vs centralized = "
+          f"{np.abs(beta - ref).max():.2e}")
+    print(f"  bytes exchanged: {fed.log.total:,} "
+          f"(centralizing the data would move {x.nbytes:,})")
+
+    # -- 2. FedAvg with relaxed sync + int8 compression -------------------
+    w_true = np.random.default_rng(0).normal(size=(64, 1))
+
+    def loss_fn(params, batch):
+        pred = batch["x"] @ params["w"]
+        return jnp.mean((pred - batch["y"]) ** 2), {}
+
+    def site_batch(site, step):
+        r = np.random.default_rng(1000 * site + step)
+        xs = r.normal(size=(128, 64))
+        return {"x": jnp.asarray(xs),
+                "y": jnp.asarray(xs @ w_true
+                                 + 0.05 * r.normal(size=(128, 1)))}
+
+    for compress in (False, True):
+        tr = FedAvgTrainer(loss_fn=loss_fn, n_sites=4, sync_every=8,
+                           lr=5e-2, compress_int8=compress)
+        tr.init({"w": jnp.zeros((64, 1))})
+        for step in range(120):
+            for s in range(4):
+                tr.local_step(s, site_batch(s, step))
+            tr.maybe_sync()
+        err = float(np.abs(np.asarray(tr.anchor["w"]) - w_true).max())
+        print(f"FedAvg (int8={compress}): max err={err:.3f}, "
+              f"wire bytes={tr.bytes_exchanged:,}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""Batched serving with KV caches (prefill + decode), the serve-side
+end-to-end driver:
+
+    PYTHONPATH=src python examples/serve_lm.py --arch qwen3-0.6b
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main()

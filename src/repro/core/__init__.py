@@ -1,0 +1,15 @@
+"""repro.core — the paper's contribution: declarative LA DSL with lineage
+tracing, lineage-based reuse, an optimizing compiler, heterogeneous
+tensors, and federated tensors (SystemDS, CIDR 2020)."""
+import jax as _jax
+
+# SystemDS's numeric lifecycle semantics are double-precision; the LM
+# model zoo uses explicit f32/bf16 dtypes and is unaffected.
+_jax.config.update("jax_enable_x64", True)
+
+from . import ops  # noqa: F401,E402
+from .compiler import Plan, compile_plan  # noqa: F401
+from .dag import LTensor, input_tensor  # noqa: F401
+from .reuse import ReuseCache  # noqa: F401
+from .runtime import (LineageRuntime, PreparedScript, evaluate,  # noqa: F401
+                      get_runtime, lineage_trace, set_runtime, value)

@@ -1,0 +1,203 @@
+"""Runtime operation library (the TensorBlock operation layer, §3.2/§3.3).
+
+Executes single HOP instructions over concrete arrays. Two physical
+representations are supported, mirroring SystemDS's dense/sparse blocks:
+
+  * dense  — jnp arrays (fp64 default on the lifecycle path, like SystemDS)
+  * sparse — jax.experimental.sparse.BCOO for 2D matrices below a density
+             threshold; matmul/gram/xtv stay sparse, everything else
+             densifies (TPU adaptation note in DESIGN.md §2a: sparsity
+             exploitation is block-level on TPU, value-level on CPU).
+
+The `gram` op routes through `repro.kernels.gram.ops` which picks the
+Pallas TPU kernel on TPU and the jnp path elsewhere.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+try:  # BCOO sparse support (available on CPU)
+    from jax.experimental import sparse as jsparse
+    HAS_SPARSE = True
+except Exception:  # pragma: no cover
+    jsparse = None
+    HAS_SPARSE = False
+
+SPARSE_THRESHOLD = 0.3
+
+
+def is_sparse(x) -> bool:
+    return HAS_SPARSE and isinstance(x, jsparse.BCOO)
+
+
+def densify(x):
+    return x.todense() if is_sparse(x) else x
+
+
+def maybe_sparsify(arr, sparsity_est: float):
+    """Convert a 2D array to BCOO when the estimate says it pays off."""
+    if (HAS_SPARSE and sparsity_est < SPARSE_THRESHOLD
+            and getattr(arr, "ndim", 0) == 2 and arr.size > 1 << 16):
+        return jsparse.BCOO.fromdense(arr)
+    return arr
+
+
+# ---------------------------------------------------------------------------
+# op implementations
+# ---------------------------------------------------------------------------
+
+def _gram(x):
+    if is_sparse(x):
+        # sparse-dense: flops ∝ nnz·n (sparse-sparse lowering is slow)
+        return densify(x.T @ x.todense())
+    from repro.kernels.gram import ops as gram_ops
+    return gram_ops.gram(x)
+
+
+def _xtv(x, v):
+    if is_sparse(x):
+        out = x.T @ densify(v)
+        return densify(out)
+    from repro.kernels.gram import ops as gram_ops
+    return gram_ops.xtv(x, v)
+
+
+def _matmul(a, b):
+    if is_sparse(a) or is_sparse(b):
+        out = a @ b
+        return densify(out)
+    return a @ b
+
+
+def _solve(a, b):
+    a = densify(a).astype(jnp.float64)
+    b = densify(b).astype(jnp.float64)
+    # SPD fast path (normal equations): cholesky solve, else generic
+    return jax.scipy.linalg.solve(a, b, assume_a="pos") \
+        if a.shape[0] == a.shape[1] else jnp.linalg.lstsq(a, b)[0]
+
+
+def _slice(x, index):
+    x = densify(x)
+    idx = []
+    for (start, stop, kind) in index:
+        idx.append(start if kind == 1 else slice(start, stop))
+    return x[tuple(idx)]
+
+
+def _colvars(x):
+    x = densify(x)
+    return jnp.var(x, axis=0, keepdims=True, ddof=1)
+
+
+_BINARY = {
+    "add": jnp.add, "sub": jnp.subtract, "mul": jnp.multiply,
+    "div": jnp.divide, "pow": jnp.power,
+    "min2": jnp.minimum, "max2": jnp.maximum,
+    "gt": lambda a, b: (a > b).astype(jnp.float32),
+    "lt": lambda a, b: (a < b).astype(jnp.float32),
+    "ge": lambda a, b: (a >= b).astype(jnp.float32),
+    "le": lambda a, b: (a <= b).astype(jnp.float32),
+    "eq": lambda a, b: (a == b).astype(jnp.float32),
+    "ne": lambda a, b: (a != b).astype(jnp.float32),
+    "and": lambda a, b: jnp.logical_and(a != 0, b != 0).astype(jnp.float32),
+    "or": lambda a, b: jnp.logical_or(a != 0, b != 0).astype(jnp.float32),
+}
+
+_UNARY = {
+    "neg": jnp.negative, "exp": jnp.exp, "log": jnp.log, "sqrt": jnp.sqrt,
+    "abs": jnp.abs, "sign": jnp.sign, "round": jnp.round,
+    "floor": jnp.floor, "ceil": jnp.ceil, "sigmoid": jax.nn.sigmoid,
+    "not": lambda x: (x == 0).astype(jnp.float32),
+}
+
+_AGG = {
+    "sum": jnp.sum, "mean": jnp.mean, "max": jnp.max, "min": jnp.min,
+    "trace": jnp.trace,
+    "nnz": lambda x: jnp.count_nonzero(x).astype(jnp.float64),
+    "colSums": partial(jnp.sum, axis=0, keepdims=True),
+    "rowSums": partial(jnp.sum, axis=1, keepdims=True),
+    "colMeans": partial(jnp.mean, axis=0, keepdims=True),
+    "rowMeans": partial(jnp.mean, axis=1, keepdims=True),
+    "colMaxs": partial(jnp.max, axis=0, keepdims=True),
+    "colMins": partial(jnp.min, axis=0, keepdims=True),
+    "colVars": _colvars,
+}
+
+
+def execute_op(op: str, attrs: dict[str, Any], inputs: list) -> Any:
+    """Execute one instruction; inputs are jnp arrays (or BCOO)."""
+    if op in _BINARY:
+        a, b = (densify(x) for x in inputs)
+        return _BINARY[op](a, b)
+    if op in _UNARY:
+        return _UNARY[op](densify(inputs[0]))
+    if op in _AGG:
+        x = densify(inputs[0])
+        return _AGG[op](x)
+    if op == "matmul":
+        return _matmul(inputs[0], inputs[1])
+    if op == "gram":
+        return _gram(inputs[0])
+    if op == "xtv":
+        return _xtv(inputs[0], inputs[1])
+    if op == "t":
+        x = inputs[0]
+        return x.T if is_sparse(x) else jnp.transpose(densify(x))
+    if op == "solve":
+        return _solve(inputs[0], inputs[1])
+    if op == "cholesky":
+        return jnp.linalg.cholesky(densify(inputs[0]).astype(jnp.float64))
+    if op == "inv":
+        return jnp.linalg.inv(densify(inputs[0]).astype(jnp.float64))
+    if op == "diag":
+        return jnp.diagonal(densify(inputs[0]))[:, None]
+    if op == "diagm":
+        return jnp.diag(densify(inputs[0])[:, 0])
+    if op == "slice":
+        return _slice(inputs[0], attrs["index"])
+    if op == "reshape":
+        return jnp.reshape(densify(inputs[0]), attrs["newshape"])
+    if op in ("rbind", "cbind"):
+        return jnp.concatenate([densify(x) for x in inputs],
+                               axis=attrs["axis"])
+    if op == "where":
+        c, a, b = (densify(x) for x in inputs)
+        return jnp.where(c != 0, a, b)
+    if op == "replace_nan":
+        return jnp.nan_to_num(densify(inputs[0]), nan=attrs["value"])
+    if op == "cumsum":
+        return jnp.cumsum(densify(inputs[0]), axis=0)
+    if op == "literal":
+        return jnp.asarray(attrs["value"])
+    if op == "full":
+        return jnp.full(attrs.get("_shape", ()), attrs["value"])
+    if op == "eye":
+        return jnp.eye(attrs["_shape"][0])
+    if op == "seq":
+        n = attrs["_shape"][0]
+        return (attrs["start"]
+                + attrs["step"] * jnp.arange(n, dtype=jnp.float64))[:, None]
+    if op == "rand":
+        key = jax.random.PRNGKey(attrs["seed"])
+        shape = attrs["_shape"]
+        if attrs.get("dist") == "normal":
+            out = jax.random.normal(key, shape, dtype=jnp.float64)
+        else:
+            out = jax.random.uniform(key, shape, dtype=jnp.float64)
+        sp = attrs.get("sparsity_gen", 1.0)
+        if sp < 1.0:
+            key2 = jax.random.PRNGKey(attrs["seed"] + 0x9E3779B9)
+            mask = jax.random.uniform(key2, shape) < sp
+            out = jnp.where(mask, out, 0.0)
+        return out
+    raise NotImplementedError(f"op {op!r}")
+
+
+def to_numpy(x) -> np.ndarray:
+    return np.asarray(densify(x))

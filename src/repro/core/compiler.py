@@ -1,0 +1,116 @@
+"""Plan compiler: HOP DAG -> ordered runtime instructions (SystemDS §3.2).
+
+Mirrors SystemDS's compilation chain at our scale: rewrites + size
+propagation happen on the DAG (shapes/sparsity are attached at
+construction), memory estimates pick an execution target per instruction
+(local vs distributed — the analogue of CP vs Spark instructions), and
+the result is a topologically ordered instruction sequence executed by
+`repro.core.runtime.LineageRuntime`.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+from .dag import LTensor, Node
+from .rewrites import run_rewrites
+
+# Default per-operation local memory budget: inputs+output of an op above
+# this threshold are flagged for the distributed backend (pjit over the
+# mesh) when one is attached. 2 GB mirrors a driver-heap style budget.
+LOCAL_MEM_BUDGET = 2 << 30
+
+
+@dataclass
+class Instruction:
+    node: Node
+    out_id: int
+    input_ids: tuple[int, ...]
+    target: str  # 'local' | 'distributed'
+    last_use_of: tuple[int, ...] = ()  # uids freed after this instruction
+
+
+@dataclass
+class Plan:
+    instructions: list[Instruction]
+    output_ids: list[int]
+    roots: list[Node]
+    est_bytes_peak: int = 0
+
+    def count_ops(self) -> dict[str, int]:
+        out: dict[str, int] = {}
+        for ins in self.instructions:
+            out[ins.node.op] = out.get(ins.node.op, 0) + 1
+        return out
+
+    def explain(self) -> str:
+        """EXPLAIN-style plan dump (SystemDS -explain)."""
+        lines = []
+        for ins in self.instructions:
+            args = ",".join(f"%{i}" for i in ins.input_ids)
+            attrs = {k: v for k, v in ins.node.attrs if k != "index"}
+            lines.append(
+                f"%{ins.out_id} = [{ins.target[0].upper()}] "
+                f"{ins.node.op}({args}) {ins.node.shape} "
+                f"sp={ins.node.sparsity:.3f} {attrs if attrs else ''}")
+        lines.append("outputs: " + ", ".join(f"%{i}" for i in self.output_ids))
+        return "\n".join(lines)
+
+
+def topo_order(roots: list[Node]) -> list[Node]:
+    seen: set[int] = set()
+    order: list[Node] = []
+
+    def rec(n: Node):
+        if n.uid in seen:
+            return
+        seen.add(n.uid)
+        for i in n.inputs:
+            rec(i)
+        order.append(n)
+
+    for r in roots:
+        rec(r)
+    return order
+
+
+def compile_plan(outputs: list[LTensor], *, reuse_enabled: bool = False,
+                 opt_level: int = 2,
+                 local_budget: int = LOCAL_MEM_BUDGET) -> Plan:
+    roots = [o.node for o in outputs]
+    roots = run_rewrites(roots, reuse_enabled=reuse_enabled,
+                         opt_level=opt_level)
+    order = topo_order(roots)
+
+    # liveness: last consumer of each node frees it (buffer-pool eviction)
+    last_consumer: dict[int, int] = {}
+    for idx, n in enumerate(order):
+        for i in n.inputs:
+            last_consumer[i.uid] = idx
+    root_ids = {r.uid for r in roots}
+    frees_at: dict[int, list[int]] = {}
+    for uid, idx in last_consumer.items():
+        if uid not in root_ids:
+            frees_at.setdefault(idx, []).append(uid)
+
+    instructions: list[Instruction] = []
+    peak = 0
+    live = 0
+    for idx, n in enumerate(order):
+        if n.op == "input":
+            continue
+        op_bytes = n.est_bytes() + sum(i.est_bytes() for i in n.inputs)
+        target = "distributed" if op_bytes > local_budget else "local"
+        instructions.append(Instruction(
+            node=n, out_id=n.uid,
+            input_ids=tuple(i.uid for i in n.inputs),
+            target=target,
+            last_use_of=tuple(frees_at.get(idx, ()))))
+        live += n.est_bytes()
+        peak = max(peak, live)
+        for uid in frees_at.get(idx, ()):  # estimate only
+            live = max(0, live - 1)  # sizes not tracked per-uid here
+
+    return Plan(instructions=instructions,
+                output_ids=[r.uid for r in roots], roots=roots,
+                est_bytes_peak=peak)

@@ -1,0 +1,168 @@
+"""Federated tensors and federated instructions (SystemDS §3.3, §4.3).
+
+A `FederatedTensor` is a metadata object holding references to per-site
+partitions covering disjoint row (or column) ranges. Instructions push
+computation to the sites and exchange only the minimal aggregates
+(paper Example 2):
+
+  fed_mv   : broadcast v -> local X_i @ v       -> rbind of results
+  fed_vm   : send v slice -> local v_i^T @ X_i  -> elementwise sum
+  fed_gram : local X_i^T X_i                    -> sum (n² exchange only)
+  fed_xtv  : local X_i^T y_i                    -> sum
+
+Every exchange is metered (`ExchangeLog`) — the paper's "exchange
+constraints" become an auditable byte budget per site.
+
+Two backends:
+  * `LocalSite` — in-process numpy workers (this container; also the
+    unit-test oracle).
+  * the multi-pod mesh backend lives in `repro.distributed.fedavg`:
+    sites = slices along the `pod` mesh axis, instructions lower to
+    shard_map programs with psum/all_gather on that axis only.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Sequence
+
+import numpy as np
+
+
+@dataclass
+class ExchangeLog:
+    to_sites: int = 0      # bytes master -> workers
+    from_sites: int = 0    # bytes workers -> master
+
+    def add_out(self, arr):
+        self.to_sites += int(np.asarray(arr).nbytes)
+
+    def add_in(self, arr):
+        self.from_sites += int(np.asarray(arr).nbytes)
+
+    @property
+    def total(self) -> int:
+        return self.to_sites + self.from_sites
+
+
+@dataclass
+class LocalSite:
+    """An in-process 'remote worker' owning one partition."""
+    data: np.ndarray
+
+    def mv(self, v):           # X_i @ v
+        return self.data @ v
+
+    def vm(self, v_slice):     # v_i^T @ X_i
+        return v_slice.T @ self.data
+
+    def gram(self):            # X_i^T X_i
+        return self.data.T @ self.data
+
+    def xtv(self, y_i):        # X_i^T y_i
+        return self.data.T @ y_i
+
+    def colsums(self):
+        return self.data.sum(axis=0, keepdims=True)
+
+    def rows(self):
+        return self.data.shape[0]
+
+
+@dataclass
+class FederatedTensor:
+    """Row-partitioned federated matrix: sites cover disjoint row ranges."""
+
+    sites: list[LocalSite]
+    ranges: list[tuple[int, int]]  # [start, stop) per site
+    ncols: int
+    log: ExchangeLog = field(default_factory=ExchangeLog)
+
+    @classmethod
+    def partition_rows(cls, x: np.ndarray, n_sites: int) -> "FederatedTensor":
+        splits = np.array_split(np.arange(x.shape[0]), n_sites)
+        sites, ranges = [], []
+        for idx in splits:
+            sites.append(LocalSite(x[idx]))
+            ranges.append((int(idx[0]), int(idx[-1]) + 1))
+        return cls(sites=sites, ranges=ranges, ncols=x.shape[1])
+
+    @property
+    def nrows(self) -> int:
+        return sum(s.rows() for s in self.sites)
+
+    @property
+    def shape(self) -> tuple[int, int]:
+        return (self.nrows, self.ncols)
+
+    # -- federated instructions (Example 2) ---------------------------------
+    def fed_mv(self, v: np.ndarray) -> np.ndarray:
+        """X @ v: broadcast v, local MV, rbind results."""
+        parts = []
+        for s in self.sites:
+            self.log.add_out(v)          # broadcast
+            r = s.mv(v)
+            self.log.add_in(r)           # collect
+            parts.append(r)
+        return np.concatenate(parts, axis=0)
+
+    def fed_vm(self, v: np.ndarray) -> np.ndarray:
+        """v^T @ X: send only the relevant slice of v, add local results."""
+        out = None
+        for s, (a, b) in zip(self.sites, self.ranges):
+            vs = v[a:b]
+            self.log.add_out(vs)
+            r = s.vm(vs)
+            self.log.add_in(r)
+            out = r if out is None else out + r
+        return out
+
+    def fed_gram(self) -> np.ndarray:
+        """X^T X with only n×n bytes exchanged per site (data never moves).
+        This is the same fold decomposition the reuse rewrites exploit —
+        federated learning and CV partial reuse share one algebraic core."""
+        out = None
+        for s in self.sites:
+            g = s.gram()
+            self.log.add_in(g)
+            out = g if out is None else out + g
+        return out
+
+    def fed_xtv(self, y: np.ndarray) -> np.ndarray:
+        out = None
+        for s, (a, b) in zip(self.sites, self.ranges):
+            ys = y[a:b]
+            self.log.add_out(ys)
+            r = s.xtv(ys)
+            self.log.add_in(r)
+            out = r if out is None else out + r
+        return out
+
+    def fed_colsums(self) -> np.ndarray:
+        out = None
+        for s in self.sites:
+            r = s.colsums()
+            self.log.add_in(r)
+            out = r if out is None else out + r
+        return out
+
+    def collect(self) -> np.ndarray:
+        """Materialize (breaks federation — for tests/debug only)."""
+        return np.concatenate([s.data for s in self.sites], axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Federated closed-form regression (the §4.3 enterprise use-case)
+# ---------------------------------------------------------------------------
+
+def federated_lmds(fx: FederatedTensor, y: np.ndarray, reg: float = 1e-7,
+                   intercept: bool = False) -> np.ndarray:
+    """lmDS over a federated X: only gram-sized aggregates leave sites."""
+    if intercept:
+        fx = FederatedTensor(
+            sites=[LocalSite(np.concatenate(
+                [s.data, np.ones((s.rows(), 1))], axis=1))
+                for s in fx.sites],
+            ranges=fx.ranges, ncols=fx.ncols + 1, log=fx.log)
+    a = fx.fed_gram() + reg * np.eye(fx.ncols)
+    b = fx.fed_xtv(y)
+    return np.linalg.solve(a, b)

@@ -1,0 +1,219 @@
+"""LineageRuntime: the control program (SystemDS §3.2 Fig. 3-3).
+
+Interprets compiled plans instruction-by-instruction, maintains the
+intermediate environment (buffer pool with liveness-based frees), traces
+lineage for every executed operation, and probes/populates the lineage
+reuse cache (§4.1).
+
+`PreparedScript` is the JMLC analogue: trace a python function once into
+a DAG with placeholder leaves, then re-execute with new in-memory inputs
+at low latency (plan is compiled once; lineage is recomputed per input so
+reuse stays sound).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional, Sequence
+
+import numpy as np
+
+from . import backend
+from .compiler import Plan, compile_plan
+from .dag import LEAVES, LTensor, Node, input_tensor
+from .reuse import ReuseCache
+
+
+@dataclass
+class RuntimeStats:
+    instructions: int = 0
+    executed: int = 0      # instructions actually computed (not reused)
+    reused: int = 0
+    exec_time: float = 0.0
+
+    def as_dict(self):
+        return dict(instructions=self.instructions, executed=self.executed,
+                    reused=self.reused, exec_time_s=round(self.exec_time, 6))
+
+
+class LineageRuntime:
+    """Executes plans with lineage tracing and optional reuse."""
+
+    def __init__(self, cache: Optional[ReuseCache] = None,
+                 opt_level: int = 2, sparse_inputs: bool = False):
+        # sparse_inputs: BCOO physical representation for low-density
+        # leaves. Default OFF: measured on this backend (XLA-CPU),
+        # BCOO gram at density 0.1 is ~4x SLOWER than dense — SystemDS's
+        # hand-tuned CSR kernels have no XLA analogue (DESIGN.md §2a,
+        # EXPERIMENTS.md §Baseline). The path stays for API fidelity.
+        self.cache = cache
+        self.opt_level = opt_level
+        self.sparse_inputs = sparse_inputs
+        self.stats = RuntimeStats()
+
+    # ------------------------------------------------------------------
+    def evaluate(self, outputs: Sequence[LTensor]) -> list[np.ndarray]:
+        plan = compile_plan(list(outputs),
+                            reuse_enabled=self.cache is not None,
+                            opt_level=self.opt_level)
+        return self.run_plan(plan)
+
+    # ------------------------------------------------------------------
+    def run_plan(self, plan: Plan,
+                 leaf_values: Optional[dict[int, Any]] = None,
+                 leaf_lineage: Optional[dict[int, str]] = None) -> list[np.ndarray]:
+        values: dict[int, Any] = {}
+        lin = dict(LEAVES.lineage)
+        if leaf_lineage:
+            lin.update(leaf_lineage)
+
+        # bind leaves
+        for ins in plan.instructions:
+            for inp in ins.node.inputs:
+                if inp.op == "input" and inp.uid not in values:
+                    src = None
+                    if leaf_values and inp.uid in leaf_values:
+                        src = leaf_values[inp.uid]
+                    elif inp.uid in LEAVES.values:
+                        src = LEAVES.values[inp.uid]
+                    else:
+                        raise KeyError(
+                            f"unbound input leaf {inp.attr('name')}")
+                    arr = np.asarray(src)
+                    val = arr
+                    if self.sparse_inputs:
+                        val = backend.maybe_sparsify(arr, inp.sparsity)
+                    values[inp.uid] = val
+        for r in plan.roots:  # outputs that are themselves leaves
+            if r.op == "input" and r.uid not in values:
+                values[r.uid] = (leaf_values or LEAVES.values)[r.uid]
+
+        # execute
+        for ins in plan.instructions:
+            self.stats.instructions += 1
+            node = ins.node
+            lhash = node.lhash(lin)
+            if self.cache is not None:
+                hit = self.cache.probe(lhash)
+                if hit is not None:
+                    values[ins.out_id] = hit
+                    self.stats.reused += 1
+                    self._free(values, ins.last_use_of, plan)
+                    continue
+            ins_inputs = [values[i] for i in ins.input_ids]
+            attrs = dict(node.attrs)
+            attrs["_shape"] = node.shape
+            t0 = time.perf_counter()
+            out = backend.execute_op(node.op, attrs, ins_inputs)
+            if hasattr(out, "block_until_ready"):
+                out.block_until_ready()
+            dt = time.perf_counter() - t0
+            self.stats.executed += 1
+            self.stats.exec_time += dt
+            values[ins.out_id] = out
+            if self.cache is not None:
+                self.cache.put(lhash, out, dt)
+            self._free(values, ins.last_use_of, plan)
+
+        return [backend.to_numpy(values[i]) for i in plan.output_ids]
+
+    @staticmethod
+    def _free(values: dict[int, Any], uids: tuple[int, ...], plan: Plan):
+        for uid in uids:
+            values.pop(uid, None)
+
+
+# ---------------------------------------------------------------------------
+# Module-level convenience (a default runtime without reuse)
+# ---------------------------------------------------------------------------
+
+_default_runtime: Optional[LineageRuntime] = None
+
+
+def get_runtime() -> LineageRuntime:
+    global _default_runtime
+    if _default_runtime is None:
+        _default_runtime = LineageRuntime()
+    return _default_runtime
+
+
+def set_runtime(rt: LineageRuntime) -> None:
+    global _default_runtime
+    _default_runtime = rt
+
+
+def evaluate(*outputs: LTensor, runtime: Optional[LineageRuntime] = None
+             ) -> list[np.ndarray]:
+    rt = runtime or get_runtime()
+    return rt.evaluate(list(outputs))
+
+
+def value(x: LTensor, runtime: Optional[LineageRuntime] = None) -> np.ndarray:
+    return evaluate(x, runtime=runtime)[0]
+
+
+# ---------------------------------------------------------------------------
+# PreparedScript (JMLC-style precompiled script, §3.1)
+# ---------------------------------------------------------------------------
+
+class PreparedScript:
+    """Compile a DSL function once; execute repeatedly with new inputs."""
+
+    def __init__(self, fn: Callable[..., Any],
+                 arg_shapes: Sequence[tuple[int, ...]],
+                 arg_dtypes: Optional[Sequence[Any]] = None,
+                 runtime: Optional[LineageRuntime] = None):
+        self.runtime = runtime or get_runtime()
+        dtypes = arg_dtypes or [np.float64] * len(arg_shapes)
+        self._leaves = [
+            input_tensor(f"arg{i}", np.zeros(s, dtype=d))
+            for i, (s, d) in enumerate(zip(arg_shapes, dtypes))]
+        outs = fn(*self._leaves)
+        if isinstance(outs, LTensor):
+            outs = [outs]
+        self._outputs = list(outs)
+        self.plan = compile_plan(
+            self._outputs, reuse_enabled=self.runtime.cache is not None,
+            opt_level=self.runtime.opt_level)
+
+    def __call__(self, *arrays) -> list[np.ndarray]:
+        assert len(arrays) == len(self._leaves)
+        leaf_values: dict[int, Any] = {}
+        leaf_lineage: dict[int, str] = {}
+        from .dag import _fingerprint
+        for leaf, arr in zip(self._leaves, arrays):
+            arr = np.asarray(arr)
+            leaf_values[leaf.node.uid] = arr
+            leaf_lineage[leaf.node.uid] = \
+                f"{leaf.node.attr('name')}:{_fingerprint(arr)}"
+        return self.runtime.run_plan(self.plan, leaf_values, leaf_lineage)
+
+
+# ---------------------------------------------------------------------------
+# Lineage trace export (§4.1 — debugging / versioning over lineage)
+# ---------------------------------------------------------------------------
+
+def lineage_trace(x: LTensor) -> str:
+    """Serialize the lineage DAG in a SystemDS-log-like text format."""
+    lines: list[str] = []
+    seen: dict[int, int] = {}
+
+    def rec(n: Node) -> int:
+        if n.uid in seen:
+            return seen[n.uid]
+        args = [rec(i) for i in n.inputs]
+        idx = len(lines)
+        seen[n.uid] = idx
+        if n.op == "input":
+            lid = LEAVES.lineage.get(n.uid, f"input:{n.attr('name')}")
+            lines.append(f"({idx}) L·input {lid}")
+        elif n.op == "literal":
+            lines.append(f"({idx}) L·lit {n.attr('value')}")
+        else:
+            attrs = {k: v for k, v in n.attrs if k != "index"}
+            ref = " ".join(f"({a})" for a in args)
+            lines.append(f"({idx}) L·{n.op} {ref} {attrs or ''}".rstrip())
+        return idx
+
+    rec(x.node)
+    return "\n".join(lines)

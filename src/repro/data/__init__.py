@@ -1,0 +1,2 @@
+from .synthetic import gen_regression, gen_tokens  # noqa: F401
+from .tokens import TokenPipeline  # noqa: F401

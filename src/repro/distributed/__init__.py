@@ -1,0 +1,2 @@
+from .sharding import (batch_specs, cache_specs, param_specs,  # noqa: F401
+                       safe_spec)

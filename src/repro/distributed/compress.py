@@ -1,0 +1,66 @@
+"""Gradient compression with error feedback (cross-pod sync traffic).
+
+int8 quantization with per-leaf scale + error-feedback residual: the
+cross-pod exchange moves 1 byte/param instead of 4 (the all-reduce is
+realized as all_gather-of-int8 + local dequant-mean, which is what makes
+the wire format actually narrow). Error feedback keeps the long-run
+update unbiased (residual carried to the next round).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(g: jnp.ndarray, err: jnp.ndarray
+                  ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Returns (q int8, scale f32 scalar, new_err)."""
+    gf = g.astype(jnp.float32) + err
+    scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    new_err = gf - q.astype(jnp.float32) * scale
+    return q, scale, new_err
+
+
+def dequantize(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_tree(grads: Any, err_state: Any) -> tuple[Any, Any, Any]:
+    """Quantize every leaf; returns (q_tree, scale_tree, new_err_state)."""
+    flat, treedef = jax.tree_util.tree_flatten(grads)
+    errs = treedef.flatten_up_to(err_state)
+    qs, scales, new_errs = [], [], []
+    for g, e in zip(flat, errs):
+        q, s, ne = quantize_int8(g, e)
+        qs.append(q)
+        scales.append(s)
+        new_errs.append(ne)
+    return (treedef.unflatten(qs), treedef.unflatten(scales),
+            treedef.unflatten(new_errs))
+
+
+def init_error_state(grads_like: Any) -> Any:
+    return jax.tree_util.tree_map(
+        lambda g: jnp.zeros(g.shape, jnp.float32), grads_like)
+
+
+def crosspod_mean_int8(q_tree: Any, scale_tree: Any, axis_name: str) -> Any:
+    """Inside shard_map/pmap over `axis_name`: exchange int8 + scales,
+    return the dequantized mean. Wire bytes = 1/4 of f32 all-reduce."""
+    def combine(q, s):
+        qs = jax.lax.all_gather(q, axis_name)          # int8 on the wire
+        ss = jax.lax.all_gather(s, axis_name)
+        deq = qs.astype(jnp.float32) * ss.reshape(
+            (-1,) + (1,) * (qs.ndim - 1))
+        return deq.mean(axis=0)
+
+    return jax.tree_util.tree_map(combine, q_tree, scale_tree)
+
+
+def compressed_bytes(grads: Any) -> tuple[int, int]:
+    """(int8 wire bytes, f32 wire bytes) for reporting."""
+    n = sum(int(jnp.size(l)) for l in jax.tree_util.tree_leaves(grads))
+    return n + 4 * len(jax.tree_util.tree_leaves(grads)), 4 * n

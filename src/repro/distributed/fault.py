@@ -1,0 +1,69 @@
+"""Straggler / failure handling harness (host-side control plane).
+
+At 1000+ nodes the control plane must notice slow or dead workers. This
+module provides the pieces the launcher composes:
+
+  * StepMonitor — per-step timing stats, flags stragglers beyond a
+    robust threshold (median + k·MAD), keeps an incident log.
+  * HeartbeatTracker — host heartbeats with a dead-man switch.
+  * simulate_failures — deterministic failure injection for tests
+    (used with checkpoint.restart to prove exact-replay recovery).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+
+@dataclass
+class StepMonitor:
+    window: int = 64
+    mad_k: float = 5.0
+    times: list = field(default_factory=list)
+    incidents: list = field(default_factory=list)
+
+    def record(self, step: int, seconds: float) -> bool:
+        """Returns True if this step is a straggler."""
+        hist = self.times[-self.window:]
+        self.times.append(seconds)
+        if len(hist) < 8:
+            return False
+        med = float(np.median(hist))
+        mad = float(np.median(np.abs(np.array(hist) - med))) or 1e-9
+        if seconds > med + self.mad_k * mad and seconds > 1.2 * med:
+            self.incidents.append(
+                {"step": step, "seconds": seconds, "median": med})
+            return True
+        return False
+
+    def p50_p99(self) -> tuple[float, float]:
+        arr = np.array(self.times or [0.0])
+        return float(np.percentile(arr, 50)), float(np.percentile(arr, 99))
+
+
+@dataclass
+class HeartbeatTracker:
+    timeout_s: float = 60.0
+    last_seen: dict = field(default_factory=dict)
+
+    def beat(self, host: str, now: Optional[float] = None) -> None:
+        self.last_seen[host] = now if now is not None else time.monotonic()
+
+    def dead_hosts(self, now: Optional[float] = None) -> list[str]:
+        now = now if now is not None else time.monotonic()
+        return [h for h, t in self.last_seen.items()
+                if now - t > self.timeout_s]
+
+
+def simulate_failures(total_steps: int, fail_steps: tuple, run_fn,
+                      resume_fn):
+    """Drive run_fn until each injected failure, then resume_fn; returns
+    the final state. Used by tests to prove restart exactness."""
+    state = None
+    for fs in sorted(fail_steps):
+        state = run_fn(until=fs, state=state)
+        state = resume_fn(state)
+    return run_fn(until=total_steps, state=state)

@@ -1,0 +1,79 @@
+"""Sharding hints: optional with_sharding_constraint annotations.
+
+GSPMD auto-sharding occasionally replicates compute it should split
+(measured: attention score tiles replicated across the `model` axis in
+the baseline dry-run — EXPERIMENTS.md §Perf iteration 1). `shard_hint`
+lets model code pin intermediate shardings *when enabled by the
+launcher*; disabled (the default) it is a no-op, so unit tests and the
+paper-faithful baseline run the pure auto-sharded graph.
+
+Spec tokens: mesh axis names, plus "dp" which expands to the configured
+data axes ("data" or ("pod", "data")).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_STATE = {"enabled": False, "data_axes": ("data",), "axes": set(),
+          "sizes": {}, "mesh": None}
+
+
+def enable_hints(mesh) -> None:
+    _STATE["enabled"] = True
+    _STATE["axes"] = set(mesh.shape.keys())
+    _STATE["sizes"] = dict(mesh.shape)
+    _STATE["mesh"] = mesh
+    _STATE["data_axes"] = tuple(a for a in ("pod", "data")
+                                if a in mesh.shape)
+
+
+def current_mesh():
+    return _STATE["mesh"]
+
+
+def disable_hints() -> None:
+    _STATE["enabled"] = False
+
+
+def hints_enabled() -> bool:
+    return _STATE["enabled"]
+
+
+def axis_size(name: str) -> int:
+    return int(_STATE["sizes"].get(name, 1))
+
+
+def _expand(token):
+    if token == "dp":
+        dp = _STATE["data_axes"]
+        return dp if len(dp) > 1 else (dp[0] if dp else None)
+    if token is None or token in _STATE["axes"]:
+        return token
+    if isinstance(token, tuple):
+        kept = tuple(t for t in token if t in _STATE["axes"])
+        return kept if kept else None
+    return None
+
+
+def shard_hint(x, *spec):
+    """Annotate x with PartitionSpec(*spec) if hints are enabled."""
+    if not _STATE["enabled"]:
+        return x
+    expanded = [_expand(s) for s in spec]
+    # drop axes that don't divide the dim (graceful degradation)
+    for i, (s, d) in enumerate(zip(expanded, x.shape)):
+        if s is None:
+            continue
+        names = s if isinstance(s, tuple) else (s,)
+        size = 1
+        for n in names:
+            size *= _STATE["sizes"].get(n, 1)
+        if d % max(size, 1) != 0:
+            expanded[i] = None
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*expanded))
+    except Exception:
+        return x

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+  gram            — fused X^T[X|y] (the paper's lmDS hot op; MXU-tiled)
+  flash_attention — causal GQA attention (prefill/train)
+  rwkv6           — chunked WKV6 recurrence (Finch time-mix)
+  ssd             — mamba selective-scan (hardware-aware scan in VMEM)
+
+Each package: kernel.py (pl.pallas_call + BlockSpec), ops.py (dispatching
+jit wrapper with interpret fallback), ref.py (pure-jnp oracle).
+"""

@@ -1,0 +1,112 @@
+"""Pallas TPU flash attention (causal, GQA via kv index mapping).
+
+Grid = (B·Hq, n_q_blocks, n_kv_blocks), kv innermost. Online softmax
+state (running max m, denominator l, accumulator acc) lives in VMEM
+scratch and persists across the kv sweep; the output tile is written at
+the last visible kv block. Causally invisible blocks are skipped with
+pl.when (no MXU work — compiled FLOPs ≈ S²/2 like the algorithm's
+ideal).
+
+BlockSpecs: q (1, bq, hd) indexed (h, i); k/v (1, bk, hd) indexed
+(h // G, j) — the GQA group shares one kv stream, so kv tiles are
+fetched HBM→VMEM once per group sweep. Default (bq, bk) = (512, 512):
+VMEM ≈ bq·hd·2 + 2·bk·hd·2 + bq·bk·4 + bq·hd·4 ≈ 1.9 MB at hd=128.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+DEFAULT_BQ = 512
+DEFAULT_BK = 512
+NEG_INF = -1e30
+
+
+def _vmem(shape, dtype):
+    """VMEM scratch allocation (TPU memory space; interpret-mode safe)."""
+    try:
+        from jax.experimental.pallas import tpu as pltpu
+        return pltpu.VMEM(shape, dtype)
+    except Exception:  # pragma: no cover
+        return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, bq: int, bk: int, n_kv: int, causal: bool):
+    i, j = pl.program_id(1), pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # block-level causal visibility: kv block j visible iff j*bk <= i*bq+bq-1
+    visible = (j * bk <= i * bq + bq - 1) if causal else True
+
+    @pl.when(visible)
+    def _compute():
+        q = q_ref[0]                                   # (bq, hd)
+        k = k_ref[0]                                   # (bk, hd)
+        v = v_ref[0]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # (bq, bk)
+        if causal:
+            qpos = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kpos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_scr[...] = l_scr[...] * alpha + p.sum(axis=1)
+        pv = jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + pv
+        m_scr[...] = m_new
+
+    @pl.when(j == n_kv - 1)
+    def _flush():
+        o_ref[0] = (acc_scr[...]
+                    / jnp.maximum(l_scr[...], 1e-30)[:, None]
+                    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "bq", "bk", "interpret"))
+def flash_pallas(q, k, v, *, causal: bool = True, bq: int = DEFAULT_BQ,
+                 bk: int = DEFAULT_BK, interpret: bool = False):
+    """q: (BH, Sq, hd); k/v: (BHkv, Sk, hd); BH = BHkv · G."""
+    BH, Sq, hd = q.shape
+    BHkv, Sk, _ = k.shape
+    G = BH // BHkv
+    bq = min(bq, Sq)
+    bk = min(bk, Sk)
+    assert Sq % bq == 0 and Sk % bk == 0, (Sq, Sk, bq, bk)
+    n_kv = Sk // bk
+    scale = float(1.0 / np.sqrt(hd))
+    grid = (BH, Sq // bq, n_kv)
+    return pl.pallas_call(
+        functools.partial(_flash_kernel, scale=scale, bq=bq, bk=bk,
+                          n_kv=n_kv, causal=causal),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, bk, hd), lambda h, i, j, G=G: (h // G, j, 0)),
+            pl.BlockSpec((1, bk, hd), lambda h, i, j, G=G: (h // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda h, i, j: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq, hd), q.dtype),
+        scratch_shapes=[
+            _vmem((bq,), jnp.float32),
+            _vmem((bq,), jnp.float32),
+            _vmem((bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

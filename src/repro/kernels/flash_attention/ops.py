@@ -1,0 +1,36 @@
+"""Dispatching wrapper for flash attention.
+
+Accepts model-layout tensors (B, S, H, hd) with GQA kv heads, flattens
+to the kernel layout, pads sequence to block multiples, and falls back
+to the chunked-jnp path off-TPU.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel, ref
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    use_pallas: Optional[bool] = None,
+                    interpret: bool = False,
+                    bq: int = kernel.DEFAULT_BQ,
+                    bk: int = kernel.DEFAULT_BK):
+    """q: (B, Sq, Hq, hd); k/v: (B, Sk, Hkv, hd) -> (B, Sq, Hq, hd)."""
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if not (use_pallas or interpret):
+        return ref.attention(q, k, v, causal=causal)
+    B, Sq, Hq, hd = q.shape
+    _, Sk, Hkv, _ = k.shape
+    G = Hq // Hkv
+    # (B, S, H, hd) -> (B*H, S, hd); kv stream shared per GQA group
+    qf = q.transpose(0, 2, 1, 3).reshape(B * Hq, Sq, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * Hkv, Sk, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * Hkv, Sk, hd)
+    out = kernel.flash_pallas(qf, kf, vf, causal=causal, bq=bq, bk=bk,
+                              interpret=interpret)
+    return out.reshape(B, Hq, Sq, hd).transpose(0, 2, 1, 3)

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for flash attention (GQA, causal)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+def attention(q, k, v, *, causal: bool = True) -> jnp.ndarray:
+    """q: (B, Sq, Hq, hd); k/v: (B, Sk, Hkv, hd); Hq % Hkv == 0."""
+    B, Sq, Hq, hd = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, hd) * (float(1.0 / np.sqrt(hd)))
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k).astype(jnp.float32)
+    if causal:
+        mask = (jnp.arange(Sq)[:, None] >= jnp.arange(k.shape[1])[None, :])
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v)
+    return out.reshape(B, Sq, Hq, v.shape[-1])

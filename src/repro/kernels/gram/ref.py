@@ -1,0 +1,23 @@
+"""Pure-jnp oracles for the gram (tsmm) kernel family."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gram(x: jnp.ndarray) -> jnp.ndarray:
+    """X^T X with f32 accumulation for low-precision inputs."""
+    acc = jnp.float32 if x.dtype in (jnp.bfloat16, jnp.float16) else x.dtype
+    return jnp.matmul(x.T, x, preferred_element_type=acc).astype(acc)
+
+
+def xtv(x: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """X^T v with f32 accumulation for low-precision inputs."""
+    acc = jnp.float32 if x.dtype in (jnp.bfloat16, jnp.float16) else x.dtype
+    return jnp.matmul(x.T, v, preferred_element_type=acc).astype(acc)
+
+
+def gram_aug(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """Gram of the augmented matrix [X | y]: one pass yields
+    [[X^T X, X^T y], [y^T X, y^T y]] — the entire lmDS sufficient statistic."""
+    xy = jnp.concatenate([x, y], axis=1)
+    return gram(xy)

@@ -1,0 +1,29 @@
+"""Dispatching wrapper for the WKV6 kernel (model layout <-> kernel layout)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel, ref
+
+
+def wkv6(r, k, v, logw, u, state, *, chunk: int = 128,
+         use_pallas: Optional[bool] = None, interpret: bool = False):
+    """Model layout: r,k,v,logw (B, S, H, dh); u (H, dh);
+    state (B, H, dh, dh). Returns (y (B,S,H,dh), state')."""
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if not (use_pallas or interpret):
+        # pure-JAX chunked path lives in repro.models.rwkv6
+        from repro.models.rwkv6 import wkv_chunked
+        return wkv_chunked(r, k, v, logw, u, state, chunk)
+    B, S, H, dh = r.shape
+    fl = lambda t: t.transpose(0, 2, 1, 3).reshape(B * H, S, dh)
+    u_f = jnp.broadcast_to(u[None], (B, H, dh)).reshape(B * H, dh)
+    s_f = state.reshape(B * H, dh, dh)
+    y, s_out = kernel.wkv6_pallas(fl(r), fl(k), fl(v), fl(logw), u_f, s_f,
+                                  chunk=chunk, interpret=interpret)
+    y = y.reshape(B, H, S, dh).transpose(0, 2, 1, 3)
+    return y, s_out.reshape(B, H, dh, dh)

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the WKV6 recurrence: naive per-step scan.
+
+  y_t = r_t^T (S_{t-1} + u ⊙ k_t v_t^T)
+  S_t = diag(w_t) S_{t-1} + k_t v_t^T          (w_t = exp(logw_t))
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6(r, k, v, logw, u, state):
+    """r,k,v,logw: (B, S, H, dh); u: (H, dh); state: (B, H, dh, dh).
+
+    Returns (y (B,S,H,dh), final state). All math in f32.
+    """
+    f32 = jnp.float32
+    B, S, H, dh = r.shape
+
+    def step(S_c, xs):
+        r_t, k_t, v_t, w_t = xs                       # (B, H, dh)
+        kv = k_t[..., :, None] * v_t[..., None, :]    # (B, H, dh, dh)
+        att = S_c + u[None, :, :, None].astype(f32) * kv
+        y = jnp.einsum("bhd,bhde->bhe", r_t, att)
+        S_c = jnp.exp(w_t)[..., None] * S_c + kv
+        return S_c, y
+
+    xs = tuple(t.astype(f32).swapaxes(0, 1) for t in (r, k, v, logw))
+    state, ys = jax.lax.scan(step, state.astype(f32), xs)
+    return ys.swapaxes(0, 1).astype(r.dtype), state

@@ -1,0 +1,20 @@
+"""Dispatching wrapper for the mamba selective-scan kernel."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from . import kernel, ref
+
+
+def ssm_scan(x, dt, A, B, C, D_skip, h0, *,
+             use_pallas: Optional[bool] = None, interpret: bool = False,
+             bd: int = kernel.DEFAULT_BD, tc: int = kernel.DEFAULT_TC):
+    """See ref.ssm_scan for the contract."""
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if not (use_pallas or interpret):
+        return ref.ssm_scan(x, dt, A, B, C, D_skip, h0)
+    return kernel.ssm_scan_pallas(x, dt, A, B, C, D_skip, h0,
+                                  bd=bd, tc=tc, interpret=interpret)

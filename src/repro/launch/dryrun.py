@@ -1,0 +1,215 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# NOTE: the two lines above MUST run before any other import (jax locks
+# the device count on first init), so this module has no
+# `from __future__ import annotations` and uses py3.9+ builtin generics.
+
+DOC = """Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell:
+  * build the model, ShapeDtypeStruct input specs, shardings,
+  * jax.jit(step).lower(...).compile() on the production mesh,
+  * print compiled.memory_analysis() (proves it fits 16 GB/chip) and
+    cost_analysis(),
+  * run the hlocost analyzer for trip-count-corrected FLOPs/bytes and
+    collective wire bytes,
+  * emit a RooflineCell JSON record (read by EXPERIMENTS.md §Roofline).
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-0.6b --shape train_4k
+  python -m repro.launch.dryrun --all [--mesh single|multi|both]
+  python -m repro.launch.dryrun --all --out results/dryrun.json
+"""
+
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs import ASSIGNED, get_config
+from repro.distributed import sharding as shard_mod
+from repro.launch import hlocost, roofline
+from repro.launch.mesh import data_axes, make_production_mesh
+from repro.launch.shapes import SHAPES, cell_supported, input_specs
+from repro.launch.steps import (make_decode_step, make_prefill_step,
+                                make_train_step, train_state_shapes)
+from repro.models import build_model
+
+
+def lower_cell(arch: str, shape_name: str, mesh, *, verbose: bool = True,
+               cfg_override=None, hints: bool = False):
+    """Returns (lowered, compiled, cell) for one (arch, shape, mesh)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.distributed.hints import disable_hints, enable_hints
+    if hints:
+        enable_hints(mesh)
+    else:
+        disable_hints()
+    cfg = cfg_override or get_config(arch)
+    model = build_model(cfg)
+    specs = input_specs(cfg, shape_name, model)
+    dax = data_axes(mesh)
+    n_dev = mesh.devices.size
+
+    def ns(spec_tree):
+        return jax.tree_util.tree_map(
+            lambda s: NamedSharding(mesh, s), spec_tree,
+            is_leaf=lambda x: isinstance(x, P))
+
+    t0 = time.time()
+    if specs["kind"] == "train":
+        params_s, opt_s = train_state_shapes(model)
+        p_specs = shard_mod.param_specs(params_s, mesh)
+        o_specs = shard_mod.param_specs(opt_s, mesh)
+        b_specs = shard_mod.batch_specs(specs["batch"], mesh, dax)
+        step = make_train_step(model)
+        with mesh:
+            lowered = jax.jit(
+                step, in_shardings=(ns(p_specs), ns(o_specs), ns(b_specs)),
+            ).lower(params_s, opt_s, specs["batch"])
+    elif specs["kind"] == "prefill":
+        params_s = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        p_specs = shard_mod.param_specs(params_s, mesh)
+        tok_spec = shard_mod.batch_specs({"t": specs["tokens"]}, mesh,
+                                         dax)["t"]
+        step = make_prefill_step(model, max_len=specs["S"])
+        args = [params_s, specs["tokens"]]
+        in_sh = [ns(p_specs), ns(tok_spec)]
+        if "image_embeds" in specs:
+            img_spec = shard_mod.batch_specs(
+                {"i": specs["image_embeds"]}, mesh, dax)["i"]
+            args.append(specs["image_embeds"])
+            in_sh.append(ns(img_spec))
+        # output caches MUST be sharded like the decode-step inputs —
+        # unsharded KV outputs measured at 20 GiB/device (§Perf log)
+        cache_sh = ns(shard_mod.cache_specs(
+            model.cache_shapes(specs["B"], specs["S"]), mesh, specs["B"],
+            dax))
+        with mesh:
+            lowered = jax.jit(step, in_shardings=tuple(in_sh),
+                              out_shardings=(None, cache_sh)
+                              ).lower(*args)
+    else:  # decode
+        params_s = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        p_specs = shard_mod.param_specs(params_s, mesh)
+        c_specs = shard_mod.cache_specs(specs["caches"], mesh, specs["B"],
+                                        dax)
+        tok_spec = shard_mod.batch_specs({"t": specs["token"]}, mesh,
+                                         dax)["t"]
+        step = make_decode_step(model)
+        with mesh:
+            lowered = jax.jit(
+                step,
+                in_shardings=(ns(p_specs), ns(tok_spec), ns(c_specs), None),
+            ).lower(params_s, specs["token"], specs["caches"],
+                    specs["cur_len"])
+
+    compiled = lowered.compile()
+    dt = time.time() - t0
+
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    txt = compiled.as_text()
+    mine = hlocost.analyze(txt, n_devices=n_dev)
+    mesh_name = "x".join(str(s) for s in mesh.devices.shape)
+    mf, tokens = roofline.model_flops_per_device(
+        cfg, specs["kind"], specs["B"], specs["S"], n_dev)
+    cell = roofline.RooflineCell(
+        arch=cfg.name, shape=shape_name, mesh=mesh_name, n_devices=n_dev,
+        kind=specs["kind"],
+        hlo_flops=mine.flops, hlo_bytes=mine.bytes,
+        coll_wire_bytes=mine.collective_wire_bytes,
+        coll_raw_bytes=mine.collective_raw_bytes,
+        per_collective=dict(mine.per_collective),
+        by_group_size={str(k): v for k, v in mine.by_group_size.items()},
+        unknown_trips=mine.unknown_trip_counts,
+        xla_flops=float(ca.get("flops", 0.0)),
+        xla_bytes=float(ca.get("bytes accessed", 0.0)),
+        arg_bytes=ma.argument_size_in_bytes,
+        out_bytes=ma.output_size_in_bytes,
+        temp_bytes=ma.temp_size_in_bytes,
+        model_flops=mf, tokens=tokens, compile_seconds=dt)
+    if verbose:
+        print(f"  memory_analysis: args={ma.argument_size_in_bytes/2**30:.2f}"
+              f"GiB out={ma.output_size_in_bytes/2**30:.2f}GiB "
+              f"temp={ma.temp_size_in_bytes/2**30:.2f}GiB per device")
+        print(f"  cost_analysis: flops={ca.get('flops', 0):.3e} "
+              f"bytes={ca.get('bytes accessed', 0):.3e} (body-once)")
+        print(f"  hlocost: flops={mine.flops:.3e} bytes={mine.bytes:.3e} "
+              f"coll_wire={mine.collective_wire_bytes:.3e} "
+              f"unknown_trips={mine.unknown_trip_counts}")
+        print(f"  roofline: t_comp={cell.t_compute*1e3:.3f}ms "
+              f"t_mem={cell.t_memory*1e3:.3f}ms "
+              f"t_coll={cell.t_collective*1e3:.3f}ms "
+              f"-> {cell.bottleneck}-bound "
+              f"(MODEL/HLO={cell.flops_ratio:.3f}, "
+              f"roofline={cell.roofline_fraction*100:.1f}%)  "
+              f"[compile {dt:.1f}s]")
+    return lowered, compiled, cell
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None,
+                    choices=list(SHAPES) + [None])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default=None, help="JSON results path")
+    ap.add_argument("--append", action="store_true")
+    ap.add_argument("--hints", action="store_true",
+                    help="enable sharding hints (optimized, non-baseline)")
+    args = ap.parse_args()
+
+    archs = ASSIGNED if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    cells, failures, skips = [], [], []
+    for multi in meshes:
+        mesh = make_production_mesh(multi_pod=multi)
+        mesh_name = "x".join(str(s) for s in mesh.devices.shape)
+        for arch in archs:
+            cfg = get_config(arch)
+            for shape_name in shapes:
+                ok, why = cell_supported(cfg, shape_name)
+                tag = f"{cfg.name} × {shape_name} × {mesh_name}"
+                if not ok:
+                    print(f"SKIP {tag}: {why}")
+                    skips.append({"cell": tag, "reason": why})
+                    continue
+                print(f"DRYRUN {tag}")
+                try:
+                    _, _, cell = lower_cell(arch, shape_name, mesh,
+                                            hints=args.hints)
+                    if args.hints:
+                        cell.mesh += "+hints"
+                    cells.append(cell)
+                except Exception as e:  # noqa: BLE001
+                    traceback.print_exc()
+                    failures.append({"cell": tag, "error": repr(e)[:500]})
+
+    print()
+    print(roofline.format_table(cells))
+    print(f"\n{len(cells)} compiled, {len(skips)} skipped (documented), "
+          f"{len(failures)} FAILED")
+    for f in failures:
+        print("  FAIL:", f["cell"], f["error"][:160])
+    if args.out:
+        existing = []
+        if args.append and os.path.exists(args.out):
+            existing = json.load(open(args.out))["cells"]
+        with open(args.out, "w") as f:
+            json.dump({"cells": existing + [c.to_dict() for c in cells],
+                       "skips": skips, "failures": failures}, f, indent=1)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

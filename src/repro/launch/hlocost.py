@@ -1,0 +1,411 @@
+"""HLO-text cost analysis with while-loop trip-count accounting.
+
+Why this exists (verified by probe, see DESIGN.md §5):
+  * XLA's `compiled.cost_analysis()` visits each instruction ONCE — a
+    jax.lax.scan of N iterations reports 1 body's FLOPs.
+  * collective bytes are not reported at all.
+
+This module re-derives per-device costs from `compiled.as_text()`
+(post-SPMD-partitioning, post-optimization HLO):
+  * splits the module into computations and builds a per-computation
+    symbol table (var -> shape/dtype),
+  * walks the call graph from ENTRY: `while` bodies/conditions are
+    multiplied by the trip count recovered from the condition's
+    `compare(counter, constant)` pattern; fusions/calls recurse with
+    multiplier 1,
+  * FLOPs: dot = 2·|out|·contraction; convolution = 2·|out|·window·Ci;
+    elementwise/reduce ≈ 1 per element (transcendental ≈ 1),
+  * bytes: Σ operand+output bytes per compute op (parameter/tuple/
+    bitcast/gte are free),
+  * collectives: wire bytes per chip under a ring model, bucketed by
+    replica-group size so the roofline can attribute them to mesh axes.
+
+Cross-validated against cost_analysis() on unrolled programs
+(tests/test_hlocost.py).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1, "f16": 2, "bf16": 2,
+    "f32": 4, "f64": 8, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "abs",
+    "negate", "exponential", "log", "tanh", "rsqrt", "sqrt", "power",
+    "select", "compare", "and", "or", "not", "xor", "convert", "floor",
+    "ceil", "sign", "cosine", "sine", "clamp", "expm1", "log1p", "atan2",
+    "remainder", "round-nearest-afz", "round-nearest-even", "logistic",
+    "cbrt", "erf",
+}
+_FREE = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "opt-barrier", "partition-id", "replica-id", "domain",
+    "get-dimension-size",
+}
+_COLLECTIVES = {"all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute", "all-reduce-start", "all-gather-start",
+                "collective-permute-start"}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(ROOT\s+)?%?([\w.\-]+)\s*=\s*(\(?[a-z0-9]+\[[^=]*?)\s*"
+    r"([a-z][\w\-]*)\((.*)$")
+
+
+@dataclass
+class Shape:
+    dtype: str
+    dims: tuple[int, ...]
+
+    @property
+    def numel(self) -> int:
+        n = 1
+        for d in self.dims:
+            n *= d
+        return n
+
+    @property
+    def bytes(self) -> int:
+        return self.numel * _DTYPE_BYTES.get(self.dtype, 4)
+
+
+def _parse_shapes(type_str: str) -> list[Shape]:
+    out = []
+    for m in _SHAPE_RE.finditer(type_str):
+        dims = tuple(int(d) for d in m.group(2).split(",") if d)
+        out.append(Shape(m.group(1), dims))
+    return out
+
+
+@dataclass
+class Instr:
+    name: str
+    opcode: str
+    shapes: list[Shape]          # output shapes (tuple flattened)
+    operands: list[str]
+    raw: str
+
+    @property
+    def out_bytes(self) -> int:
+        return sum(s.bytes for s in self.shapes)
+
+    @property
+    def out_numel(self) -> int:
+        return sum(s.numel for s in self.shapes)
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: dict[str, Instr] = field(default_factory=dict)
+    order: list[str] = field(default_factory=list)
+
+
+@dataclass
+class CostTotals:
+    flops: float = 0.0
+    bytes: float = 0.0
+    transcendentals: float = 0.0
+    collective_wire_bytes: float = 0.0     # ring-model per-chip bytes
+    collective_raw_bytes: float = 0.0      # Σ payload bytes
+    per_collective: dict = field(default_factory=lambda: defaultdict(float))
+    by_group_size: dict = field(default_factory=lambda: defaultdict(float))
+    unknown_trip_counts: int = 0
+
+    def add(self, other: "CostTotals", mult: float = 1.0) -> None:
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.transcendentals += other.transcendentals * mult
+        self.collective_wire_bytes += other.collective_wire_bytes * mult
+        self.collective_raw_bytes += other.collective_raw_bytes * mult
+        for k, v in other.per_collective.items():
+            self.per_collective[k] += v * mult
+        for k, v in other.by_group_size.items():
+            self.by_group_size[k] += v * mult
+        self.unknown_trip_counts += other.unknown_trip_counts
+
+
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+
+def parse_module(hlo_text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for raw_line in hlo_text.splitlines():
+        line = re.sub(r"/\*.*?\*/", "", raw_line)   # strip HLO comments
+        stripped = line.strip()
+        is_instr = re.match(r"^(ROOT\s+)?%?[\w.\-]+\s*=", stripped)
+        # computation header: `%name (args) -> type {` or `ENTRY %name ...`
+        m = re.match(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{\s*$",
+                     stripped)
+        if m and not is_instr:
+            cur = Computation(name=m.group(2))
+            comps[m.group(2)] = cur
+            if m.group(1):
+                comps["__entry__"] = cur
+            continue
+        if stripped.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        im = _INSTR_RE.match(line)
+        if not im:
+            continue
+        _, name, type_str, opcode, rest = im.groups()
+        # operands: up to the closing paren at depth 0
+        depth, args_end = 1, len(rest)
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    args_end = i
+                    break
+        arg_str = rest[:args_end]
+        operands = _OPERAND_RE.findall(arg_str)
+        instr = Instr(name=name, opcode=opcode,
+                      shapes=_parse_shapes(type_str), operands=operands,
+                      raw=stripped)
+        cur.instrs[name] = instr
+        cur.order.append(name)
+    return comps
+
+
+def _attr(raw: str, key: str) -> Optional[str]:
+    """Parse `key=value` where value is a {...} block or a bare token
+    (no commas — attribute separators)."""
+    m = re.search(key + r"=((\{[^}]*\})|([%\w.\-]+))", raw)
+    return m.group(1) if m else None
+
+
+def _dims_list(raw: str, key: str) -> list[int]:
+    v = _attr(raw, key)
+    if not v:
+        return []
+    return [int(x) for x in re.findall(r"\d+", v)]
+
+
+def _group_size(raw: str, n_devices: int) -> int:
+    # new format: replica_groups=[8,64]<=[512]
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", raw)
+    if m:
+        return int(m.group(2))
+    # old format: replica_groups={{0,1,2},{3,4,5}}
+    m = re.search(r"replica_groups=\{\{([0-9,]+)\}", raw)
+    if m:
+        return len(m.group(1).split(","))
+    return n_devices
+
+
+def _trip_count(cond: Computation) -> Optional[int]:
+    """Recover scan trip counts: condition compares counter < constant."""
+    consts: dict[str, int] = {}
+    for name in cond.order:
+        ins = cond.instrs[name]
+        if ins.opcode == "constant":
+            m = re.search(r"constant\((-?\d+)\)", ins.raw)
+            if m:
+                consts[name] = int(m.group(1))
+    for name in cond.order:
+        ins = cond.instrs[name]
+        if ins.opcode == "compare" and "direction=LT" in ins.raw:
+            for op in ins.operands:
+                if op in consts:
+                    return consts[op]
+    # fallback: any positive constant in the condition
+    pos = [v for v in consts.values() if v > 0]
+    return max(pos) if pos else None
+
+
+class HloCostAnalyzer:
+    def __init__(self, hlo_text: str, n_devices: int = 1):
+        self.comps = parse_module(hlo_text)
+        self.n_devices = n_devices
+        self._memo: dict[str, CostTotals] = {}
+
+    # -- per-instruction costs ------------------------------------------------
+    def _shape_of(self, comp: Computation, var: str) -> Optional[Shape]:
+        ins = comp.instrs.get(var)
+        if ins and ins.shapes:
+            return ins.shapes[0]
+        return None
+
+    def _instr_cost(self, comp: Computation, ins: Instr) -> CostTotals:
+        t = CostTotals()
+        op = ins.opcode
+        if op in _FREE:
+            return t
+        if op in ("while",):
+            body_name = (_attr(ins.raw, "body") or "").strip("%")
+            body = self.comps.get(body_name)
+            cond_name = (_attr(ins.raw, "condition") or "").strip("%")
+            cond = self.comps.get(cond_name)
+            # primary: XLA annotates known trip counts in backend_config
+            m = re.search(r'known_trip_count...?.?"n":"(\d+)"', ins.raw)
+            trips = int(m.group(1)) if m else (
+                _trip_count(cond) if cond else None)
+            if trips is None:
+                trips = 1
+                t.unknown_trip_counts += 1
+            if body:
+                t.add(self.comp_cost(body.name), trips)
+            if cond:
+                t.add(self.comp_cost(cond.name), trips)
+            return t
+        if op == "dynamic-update-slice":
+            # in-place update: traffic = the updated window (read+write),
+            # not the full aliased buffer
+            upd = self._shape_of(comp, ins.operands[1]) \
+                if len(ins.operands) > 1 else None
+            win = upd.bytes if upd else ins.out_bytes
+            t.bytes += 2.0 * win
+            return t
+        if op in ("fusion", "call", "async-start", "async-done"):
+            target = _attr(ins.raw, "calls") or _attr(ins.raw, "to_apply")
+            root_win = None
+            if target:
+                tc = self.comps.get(target.strip("%"))
+                if tc and tc.order:
+                    root = tc.instrs[tc.order[-1]]
+                    if root.opcode == "dynamic-update-slice" and \
+                            len(root.operands) > 1:
+                        ru = self._shape_of(tc, root.operands[1])
+                        root_win = ru.bytes if ru else None
+            if target:
+                inner = self.comp_cost(target.strip("%"))
+                # flops/collectives recurse; bytes do NOT — fusion
+                # internals never touch HBM, only the fusion I/O does
+                t.flops += inner.flops
+                t.transcendentals += inner.transcendentals
+                t.collective_wire_bytes += inner.collective_wire_bytes
+                t.collective_raw_bytes += inner.collective_raw_bytes
+                for k, v in inner.per_collective.items():
+                    t.per_collective[k] += v
+                for k, v in inner.by_group_size.items():
+                    t.by_group_size[k] += v
+                t.unknown_trip_counts += inner.unknown_trip_counts
+            out_charge = root_win if root_win is not None else ins.out_bytes
+            t.bytes += out_charge + self._operand_bytes(
+                comp, ins, cap=out_charge)
+            return t
+        if op == "conditional":
+            branches = re.findall(r"branch_computations=\{([^}]*)\}",
+                                  ins.raw)
+            names = re.findall(r"%([\w.\-]+)", branches[0]) if branches \
+                else []
+            for nm in names[:1]:   # count one branch (they're exclusive)
+                t.add(self.comp_cost(nm))
+            return t
+        if op in _COLLECTIVES:
+            payload = ins.out_bytes
+            n = max(_group_size(ins.raw, self.n_devices), 1)
+            kind = op.replace("-start", "")
+            if kind == "all-reduce":
+                wire = 2.0 * (n - 1) / n * payload
+            elif kind in ("all-gather", "reduce-scatter"):
+                wire = (n - 1) / n * payload
+            elif kind == "all-to-all":
+                wire = (n - 1) / n * payload
+            else:  # collective-permute
+                wire = payload
+            t.collective_raw_bytes += payload
+            t.collective_wire_bytes += wire
+            t.per_collective[kind] += wire
+            t.by_group_size[n] += wire
+            t.bytes += ins.out_bytes + self._operand_bytes(comp, ins)
+            return t
+
+        # compute ops
+        if op == "dot":
+            out = ins.shapes[0]
+            lhs = self._shape_of(comp, ins.operands[0]) if ins.operands \
+                else None
+            cdims = _dims_list(ins.raw, "lhs_contracting_dims")
+            csize = 1
+            if lhs:
+                for d in cdims:
+                    if d < len(lhs.dims):
+                        csize *= lhs.dims[d]
+            t.flops += 2.0 * out.numel * csize
+        elif op == "convolution":
+            out = ins.shapes[0]
+            window = _dims_list(ins.raw, "window")
+            ksize = 1
+            m = re.search(r"size=([0-9x]+)", ins.raw)
+            if m:
+                for d in m.group(1).split("x"):
+                    ksize *= int(d)
+            # feature_group_count handles depthwise
+            fgc = int((_attr(ins.raw, "feature_group_count") or "1"))
+            lhs = self._shape_of(comp, ins.operands[0])
+            ci = lhs.dims[1] if lhs and len(lhs.dims) > 1 else 1
+            t.flops += 2.0 * out.numel * ksize * max(ci // max(fgc, 1), 1)
+        elif op in ("reduce", "reduce-window"):
+            lhs = self._shape_of(comp, ins.operands[0])
+            t.flops += float(lhs.numel if lhs else ins.out_numel)
+        elif op in _ELEMENTWISE or op in (
+                "broadcast", "iota", "reshape", "transpose", "slice",
+                "concatenate", "pad", "reverse", "gather", "scatter",
+                "dynamic-slice", "dynamic-update-slice", "sort", "rng",
+                "copy", "select-and-scatter", "cumsum", "map", "exponential"):
+            if op in _ELEMENTWISE:
+                t.flops += float(ins.out_numel)
+                if op in ("exponential", "log", "tanh", "rsqrt", "sqrt",
+                          "logistic", "power", "cosine", "sine", "erf"):
+                    t.transcendentals += float(ins.out_numel)
+        else:
+            # unknown op: count bytes only
+            pass
+        cap = ins.out_bytes if ins.opcode in self._WINDOWED else None
+        t.bytes += ins.out_bytes + self._operand_bytes(comp, ins, cap=cap)
+        return t
+
+    def _operand_bytes(self, comp: Computation, ins: Instr,
+                       cap: Optional[int] = None) -> float:
+        total = 0.0
+        for op in ins.operands:
+            s = self._shape_of(comp, op)
+            if s:
+                b = s.bytes
+                if cap is not None:
+                    b = min(b, cap)
+                total += b
+        return total
+
+    # ops that read/write only an output-sized window of big operands
+    # (scan xs dynamic-slices, ys dynamic-update-slices are in-place):
+    # charging the full carried array per trip overcounted memory terms
+    # by up to ~300x (see EXPERIMENTS.md §Roofline methodology).
+    _WINDOWED = {"fusion", "call", "dynamic-slice", "dynamic-update-slice",
+                 "gather", "scatter", "select-and-scatter"}
+
+    # -- computation / module totals -------------------------------------------
+    def comp_cost(self, name: str) -> CostTotals:
+        name = name.strip("%")
+        if name in self._memo:
+            return self._memo[name]
+        comp = self.comps.get(name)
+        t = CostTotals()
+        self._memo[name] = t       # break cycles defensively
+        if comp is None:
+            return t
+        for iname in comp.order:
+            ins = comp.instrs[iname]
+            t.add(self._instr_cost(comp, ins))
+        return t
+
+    def total(self) -> CostTotals:
+        return self.comp_cost("__entry__")
+
+
+def analyze(hlo_text: str, n_devices: int = 1) -> CostTotals:
+    return HloCostAnalyzer(hlo_text, n_devices=n_devices).total()

@@ -1,0 +1,147 @@
+"""Roofline terms from a compiled dry-run artifact (TPU v5e targets).
+
+    compute term    = HLO_FLOPs_per_device / PEAK_FLOPS
+    memory term     = HLO_bytes_per_device / HBM_BW
+    collective term = ring-model wire bytes per chip / ICI_BW
+
+FLOPs/bytes come from `repro.launch.hlocost` (while-loop trip counts
+included — XLA's own cost_analysis counts scan bodies once, verified).
+MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D (MoE) + attention window
+term; the ratio MODEL_FLOPS / HLO_FLOPs flags remat/redundancy waste.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import asdict, dataclass, field
+from typing import Any, Optional
+
+# TPU v5e hardware constants (per chip)
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s/link (~per-direction per link)
+
+
+@dataclass
+class RooflineCell:
+    arch: str
+    shape: str
+    mesh: str
+    n_devices: int
+    kind: str                      # train | prefill | decode
+    # per-device measured (hlocost)
+    hlo_flops: float = 0.0
+    hlo_bytes: float = 0.0
+    coll_wire_bytes: float = 0.0
+    coll_raw_bytes: float = 0.0
+    per_collective: dict = field(default_factory=dict)
+    by_group_size: dict = field(default_factory=dict)
+    unknown_trips: int = 0
+    # xla raw (body-once) for cross-reference
+    xla_flops: float = 0.0
+    xla_bytes: float = 0.0
+    # memory analysis (per device)
+    arg_bytes: int = 0
+    out_bytes: int = 0
+    temp_bytes: int = 0
+    # analytic
+    model_flops: float = 0.0       # useful flops per device per step
+    tokens: int = 0
+    compile_seconds: float = 0.0
+
+    # -- derived ---------------------------------------------------------
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_wire_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """useful-compute time / modeled step time (perfect overlap)."""
+        t_star = self.model_flops / PEAK_FLOPS
+        t_step = max(self.t_compute, self.t_memory, self.t_collective)
+        return t_star / t_step if t_step > 0 else 0.0
+
+    @property
+    def flops_ratio(self) -> float:
+        return self.model_flops / self.hlo_flops if self.hlo_flops else 0.0
+
+    def to_dict(self) -> dict:
+        d = asdict(self)
+        d.update(t_compute=self.t_compute, t_memory=self.t_memory,
+                 t_collective=self.t_collective, bottleneck=self.bottleneck,
+                 roofline_fraction=self.roofline_fraction,
+                 flops_ratio=self.flops_ratio)
+        return d
+
+
+def model_flops_per_device(cfg, kind: str, batch: int, seq: int,
+                           n_devices: int) -> tuple[float, int]:
+    """Analytic useful FLOPs per device per step + tokens processed.
+
+    train: 6·N_active·D (fwd 2 + bwd 4) + attention 12·B·S²·H·hd·L_attn/2
+    prefill: 2·N_active·D + attention 4·B·S²·H·hd·L_attn/2
+    decode: 2·N_active·B + attention 4·B·S·H·hd·L_attn (one token)."""
+    n_active = cfg.active_params()
+    hd = cfg.head_dim
+    # attention layer count
+    kinds = cfg.layer_kinds() * cfg.n_periods()
+    n_attn = sum(1 for k in kinds if k.startswith("attn")) \
+        + cfg.first_dense_layers
+    n_mamba = sum(1 for k in kinds if k.startswith("mamba"))
+    if kind == "train":
+        tokens = batch * seq
+        base = 6.0 * n_active * tokens
+        attn = 12.0 * batch * seq * seq * cfg.n_heads * hd * n_attn / 2
+        ssm = 18.0 * batch * seq * cfg.d_inner * cfg.d_state * n_mamba \
+            if n_mamba else 0.0
+        if cfg.ssm_type == "rwkv6":
+            # chunked linear attention: ≈ 2·(C + 2·dh)·d per token fwd
+            ssm = 6.0 * batch * seq * cfg.d_model \
+                * (cfg.rwkv_chunk + 2 * cfg.rwkv_head_dim) * cfg.n_layers
+        total = base + attn + ssm
+    elif kind == "prefill":
+        tokens = batch * seq
+        total = 2.0 * n_active * tokens \
+            + 4.0 * batch * seq * seq * cfg.n_heads * hd * n_attn / 2
+    else:  # decode: one new token, attends over the full cache
+        tokens = batch
+        total = 2.0 * n_active * batch \
+            + 4.0 * batch * seq * cfg.n_heads * hd * n_attn
+    return total / n_devices, tokens
+
+
+def format_table(cells: list[RooflineCell]) -> str:
+    hdr = (f"{'arch':22s} {'shape':12s} {'mesh':9s} {'kind':7s} "
+           f"{'t_comp(ms)':>10s} {'t_mem(ms)':>10s} {'t_coll(ms)':>10s} "
+           f"{'bound':>9s} {'MODEL/HLO':>9s} {'roofline%':>9s}")
+    lines = [hdr, "-" * len(hdr)]
+    for c in cells:
+        lines.append(
+            f"{c.arch:22s} {c.shape:12s} {c.mesh:9s} {c.kind:7s} "
+            f"{c.t_compute*1e3:10.3f} {c.t_memory*1e3:10.3f} "
+            f"{c.t_collective*1e3:10.3f} {c.bottleneck:>9s} "
+            f"{c.flops_ratio:9.3f} {c.roofline_fraction*100:8.1f}%")
+    return "\n".join(lines)
+
+
+def save_cells(cells: list[RooflineCell], path: str) -> None:
+    with open(path, "w") as f:
+        json.dump([c.to_dict() for c in cells], f, indent=1)
+
+
+def load_cells(path: str) -> list[dict]:
+    with open(path) as f:
+        return json.load(f)

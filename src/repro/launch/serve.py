@@ -1,0 +1,91 @@
+"""Serving driver: batched prefill + decode with KV caches.
+
+CPU-runnable on reduced configs (examples/serve_lm.py); the step
+functions are the exact ones the decode_32k / long_500k dry-run lowers
+at production shapes.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.launch.steps import make_decode_step, make_prefill_step
+from repro.models import build_model
+
+
+def generate(model, params, prompts: np.ndarray, *, max_new: int,
+             max_len: int, temperature: float = 0.0, seed: int = 0,
+             image_embeds=None):
+    """prompts: (B, S) int32 (or (B, S, K)). Greedy/temperature sampling."""
+    cfg = model.cfg
+    prefill = jax.jit(make_prefill_step(model, max_len=max_len))
+    decode = jax.jit(make_decode_step(model))
+    if image_embeds is not None:
+        logits, caches = prefill(params, jnp.asarray(prompts),
+                                 jnp.asarray(image_embeds))
+    else:
+        logits, caches = prefill(params, jnp.asarray(prompts))
+    cur = prompts.shape[1]
+    key = jax.random.PRNGKey(seed)
+    out_tokens = []
+    tok = None
+    for i in range(max_new):
+        if temperature > 0:
+            key, sub = jax.random.split(key)
+            tok = jax.random.categorical(sub, logits / temperature, axis=-1)
+        else:
+            tok = jnp.argmax(logits, axis=-1)
+        if cfg.n_codebooks:
+            tok = tok.reshape(tok.shape[0], 1, cfg.n_codebooks)
+        else:
+            tok = tok[:, None]
+        out_tokens.append(np.asarray(tok))
+        logits, caches = decode(params, tok, caches, jnp.int32(cur + i))
+    return np.concatenate(out_tokens, axis=1)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--max-new", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    shape = (args.batch, args.prompt_len, cfg.n_codebooks) \
+        if cfg.n_codebooks else (args.batch, args.prompt_len)
+    prompts = rng.integers(0, cfg.vocab_size, shape).astype(np.int32)
+    img = None
+    if cfg.family == "vlm":
+        from repro.data.frontends import vision_embeddings
+        cfg2 = cfg.with_(n_image_tokens=16)
+        model = build_model(cfg2)
+        params = model.init(jax.random.PRNGKey(0))
+        img = vision_embeddings(args.batch, 16, cfg.d_model)
+
+    max_len = args.prompt_len + args.max_new
+    t0 = time.time()
+    toks = generate(model, params, prompts, max_new=args.max_new,
+                    max_len=max_len, temperature=args.temperature,
+                    image_embeds=img)
+    dt = time.time() - t0
+    print(f"arch={cfg.name} generated {toks.shape} in {dt:.2f}s "
+          f"({args.batch*args.max_new/dt:.1f} tok/s)")
+    print("sample:", toks[0].reshape(args.max_new, -1)[:8].tolist())
+
+
+if __name__ == "__main__":
+    main()

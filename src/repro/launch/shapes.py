@@ -1,0 +1,72 @@
+"""Assigned input shapes × per-arch input_specs (ShapeDtypeStruct
+stand-ins: weak-type-correct, shardable, no device allocation).
+
+Shapes (LM family, seq_len × global_batch):
+  train_4k     seq 4,096  batch 256   (training)
+  prefill_32k  seq 32,768 batch 32    (inference prefill)
+  decode_32k   seq 32,768 batch 128   (one token, KV cache of 32k)
+  long_500k    seq 524,288 batch 1    (long-context decode; only for
+                                       sub-quadratic archs: ssm/hybrid)
+
+``decode_*``/``long_*`` lower `decode_step` (serve_step), not train_step.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.model import Model
+
+SHAPES = {
+    "train_4k": dict(kind="train", seq_len=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq_len=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq_len=32768, batch=128),
+    "long_500k": dict(kind="decode", seq_len=524288, batch=1),
+}
+
+# pure full-attention archs skip long_500k (no sub-quadratic path);
+# ssm / hybrid run it (recurrent state decode / tiny KV slice).
+LONG_OK_FAMILIES = ("ssm", "hybrid")
+
+
+def cell_supported(cfg: ModelConfig, shape_name: str) -> tuple[bool, str]:
+    if shape_name == "long_500k" and cfg.family not in LONG_OK_FAMILIES:
+        return False, (f"{cfg.name} is pure full-attention; long_500k "
+                       "needs sub-quadratic attention (DESIGN.md §6)")
+    return True, ""
+
+
+def _tokens_sds(cfg: ModelConfig, batch: int, seq: int):
+    shape = (batch, seq, cfg.n_codebooks) if cfg.n_codebooks \
+        else (batch, seq)
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def input_specs(cfg: ModelConfig, shape_name: str, model: Model) -> dict:
+    """Returns {'kind', 'args': tuple of ShapeDtypeStruct pytrees, ...}."""
+    info = SHAPES[shape_name]
+    B, S = info["batch"], info["seq_len"]
+    kind = info["kind"]
+    if kind == "train":
+        batch = {"tokens": _tokens_sds(cfg, B, S),
+                 "labels": _tokens_sds(cfg, B, S)}
+        if cfg.family == "vlm":
+            batch["image_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_image_tokens, cfg.d_model), jnp.dtype(cfg.dtype))
+        return {"kind": kind, "batch": batch, "B": B, "S": S}
+    if kind == "prefill":
+        out = {"kind": kind, "tokens": _tokens_sds(cfg, B, S),
+               "B": B, "S": S}
+        if cfg.family == "vlm":
+            out["image_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_image_tokens, cfg.d_model), jnp.dtype(cfg.dtype))
+        return out
+    # decode: one new token against a cache of length S
+    caches = model.cache_shapes(B, S)
+    return {"kind": kind, "token": _tokens_sds(cfg, B, 1),
+            "caches": caches, "cur_len": jax.ShapeDtypeStruct((), jnp.int32),
+            "B": B, "S": S}

@@ -1,0 +1,58 @@
+"""Step-function builders: train_step / prefill_step / decode_step.
+
+These are the units the dry-run lowers and the trainers jit. Signatures
+are pure (params/opt/batch in, params/opt/metrics out) so they compose
+with pjit shardings directly.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+from repro.optim.adamw import AdamWState, adamw_init, adamw_update
+
+
+def make_train_step(model: Model, *, lr: float | Callable = 3e-4,
+                    weight_decay: float = 0.1,
+                    max_grad_norm: float = 1.0) -> Callable:
+    def train_step(params, opt_state: AdamWState, batch: dict):
+        (loss, metrics), grads = jax.value_and_grad(
+            model.loss, has_aux=True)(params, batch)
+        step_lr = lr(opt_state.step) if callable(lr) else lr
+        new_params, new_opt, om = adamw_update(
+            grads, opt_state, params, lr=step_lr,
+            weight_decay=weight_decay, max_grad_norm=max_grad_norm)
+        out = {"loss": loss, **metrics, **om}
+        return new_params, new_opt, out
+
+    return train_step
+
+
+def make_prefill_step(model: Model, *, max_len: int) -> Callable:
+    def prefill_step(params, tokens, image_embeds=None):
+        return model.prefill(params, tokens, max_len=max_len,
+                             image_embeds=image_embeds)
+
+    return prefill_step
+
+
+def make_decode_step(model: Model) -> Callable:
+    def decode_step(params, token, caches, cur_len):
+        return model.decode_step(params, token, caches, cur_len)
+
+    return decode_step
+
+
+def init_train_state(model: Model, rng) -> tuple[Any, AdamWState]:
+    params = model.init(rng)
+    return params, adamw_init(params)
+
+
+def train_state_shapes(model: Model) -> tuple[Any, AdamWState]:
+    """ShapeDtypeStructs for (params, opt_state) — dry-run inputs."""
+    return jax.eval_shape(
+        lambda k: init_train_state(model, k), jax.random.PRNGKey(0))

@@ -1,0 +1,10 @@
+"""Declarative lifecycle builtins (SystemDS Fig. 1 stack / Fig. 2 example).
+
+DML-bodied builtin analogues, written on the lineage-traced DSL so the
+compiler rewrites + reuse cache optimize across lifecycle tasks."""
+from .regression import lm, lmCG, lmDS, steplm  # noqa: F401
+from .validation import cross_validate_lm, grid_search_lm  # noqa: F401
+from .cleaning import (impute_by_mean, impute_by_median, mice_lite,  # noqa: F401
+                       outlier_by_iqr, outlier_by_sd, scale_matrix,
+                       winsorize)
+from .algorithms import kmeans, l2svm, mlogreg, pca  # noqa: F401

@@ -1,0 +1,141 @@
+"""Data cleaning / preparation builtins (SystemDS §4.2).
+
+Vectorized implementations over the DSL: masking turns missing-value
+imputation and outlier handling into sequences of full matrix operations
+("masking allows data slicing and missing value imputation ... via
+sequences of full matrix operations", §4.2), which keeps them inside the
+compiler's optimization scope and trivially distributable.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from repro.core import ops
+from repro.core.dag import LTensor, input_tensor
+from repro.core.runtime import LineageRuntime, get_runtime
+
+
+def _rt(runtime):
+    return runtime or get_runtime()
+
+
+def isnan_mask(X: LTensor) -> LTensor:
+    """1.0 where NaN (NaN != NaN)."""
+    return X._bin(X, "ne")
+
+
+def scale_matrix(X: LTensor, center: bool = True, scale: bool = True,
+                 runtime: Optional[LineageRuntime] = None) -> np.ndarray:
+    """z-score standardization (DML `scale`)."""
+    out = X
+    if center:
+        out = out - ops.colMeans(out)
+    if scale:
+        out = out / ops.sqrt(ops.colVars(X))
+    return _rt(runtime).evaluate([out])[0]
+
+
+def impute_by_mean(X: LTensor, runtime: Optional[LineageRuntime] = None
+                   ) -> np.ndarray:
+    """Replace NaNs by per-column means of observed values (mask algebra)."""
+    mask = isnan_mask(X)                      # 1 where missing
+    x0 = ops.replace_nan(X, 0.0)
+    obs = X.shape[0] - ops.colSums(mask)      # observed count per column
+    mu = ops.colSums(x0) / ops.maximum(obs, 1.0)
+    out = x0 + mask * mu
+    return _rt(runtime).evaluate([out])[0]
+
+
+def impute_by_median(X: LTensor, runtime: Optional[LineageRuntime] = None
+                     ) -> np.ndarray:
+    """Median imputation; order statistics run in the control program
+    (host) like SystemDS's sort-based quantiles."""
+    rt = _rt(runtime)
+    x = rt.evaluate([X])[0]
+    med = np.nanmedian(x, axis=0, keepdims=True)
+    return np.where(np.isnan(x), med, x)
+
+
+def mice_lite(X: LTensor, n_iter: int = 3, reg: float = 1e-3,
+              runtime: Optional[LineageRuntime] = None) -> np.ndarray:
+    """Chained-equation imputation (mice, §4.2 ref [71]) via mask algebra.
+
+    Each round regresses every incomplete column on the others over the
+    *observed* rows (row mask folded into the normal equations:
+    gram(M⊙X) and (M⊙X)^T y — full matrix ops, no gather/scatter), then
+    rewrites only the missing entries.
+    """
+    rt = _rt(runtime)
+    x_np = rt.evaluate([X])[0] if isinstance(X, LTensor) else np.asarray(X)
+    miss = np.isnan(x_np)
+    # init: mean imputation
+    mu = np.nanmean(x_np, axis=0, keepdims=True)
+    cur = np.where(miss, mu, x_np)
+    n, d = cur.shape
+    for _ in range(n_iter):
+        for j in range(d):
+            mj = miss[:, j]
+            if not mj.any() or mj.all():
+                continue
+            others = [k for k in range(d) if k != j]
+            Xo = input_tensor("miceX", cur[:, others])
+            yj = input_tensor("micey", cur[:, j:j + 1])
+            w = input_tensor("micew", (~mj).astype(np.float64)[:, None])
+            Xw = Xo * w                      # zero out unobserved rows
+            yw = yj * w
+            A = ops.gram(Xw) + reg * ops.eye(d - 1)
+            b = ops.xtv(Xw, yw)
+            beta_t = ops.solve(A, b)
+            pred_t = Xo @ beta_t
+            pred = rt.evaluate([pred_t])[0]
+            cur[mj, j] = pred[mj, 0]
+    return cur
+
+
+def outlier_by_iqr(X: LTensor, k: float = 1.5, repair: str = "nan",
+                   runtime: Optional[LineageRuntime] = None) -> np.ndarray:
+    """Flag/repair values outside [Q1 - k·IQR, Q3 + k·IQR] per column."""
+    rt = _rt(runtime)
+    x = rt.evaluate([X])[0] if isinstance(X, LTensor) else np.asarray(X)
+    q1 = np.nanquantile(x, 0.25, axis=0, keepdims=True)
+    q3 = np.nanquantile(x, 0.75, axis=0, keepdims=True)
+    iqr = q3 - q1
+    lo, hi = q1 - k * iqr, q3 + k * iqr
+    bad = (x < lo) | (x > hi)
+    if repair == "nan":
+        return np.where(bad, np.nan, x)
+    if repair == "clip":
+        return np.clip(x, lo, hi)
+    return bad.astype(np.float64)  # repair == "flag"
+
+
+def outlier_by_sd(X: LTensor, k: float = 3.0, repair: str = "nan",
+                  runtime: Optional[LineageRuntime] = None) -> np.ndarray:
+    """Flag/repair values beyond k standard deviations (DSL mask algebra)."""
+    rt = _rt(runtime)
+    mu = ops.colMeans(X)
+    sd = ops.sqrt(ops.colVars(X))
+    dev = ops.abs_(X - mu)
+    bad = dev > (k * sd)
+    x_np, bad_np = rt.evaluate([X, bad])
+    if repair == "nan":
+        return np.where(bad_np != 0, np.nan, x_np)
+    if repair == "clip":
+        mu_np, sd_np = rt.evaluate([mu, sd])
+        return np.clip(x_np, mu_np - k * sd_np, mu_np + k * sd_np)
+    return bad_np
+
+
+def winsorize(X: LTensor, lower: float = 0.05, upper: float = 0.95,
+              runtime: Optional[LineageRuntime] = None) -> np.ndarray:
+    """Clamp each column to its [lower, upper] quantiles."""
+    rt = _rt(runtime)
+    x = rt.evaluate([X])[0] if isinstance(X, LTensor) else np.asarray(X)
+    lo = np.nanquantile(x, lower, axis=0, keepdims=True)
+    hi = np.nanquantile(x, upper, axis=0, keepdims=True)
+    xt = input_tensor("winsX", x)
+    out = ops.minimum(ops.maximum(xt, input_tensor("winsLo", lo)),
+                      input_tensor("winsHi", hi))
+    return rt.evaluate([out])[0]

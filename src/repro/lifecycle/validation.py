@@ -1,0 +1,77 @@
+"""Model validation / selection builtins (paper §5 workloads).
+
+`grid_search_lm` is the HPO workload of Fig. 5/6: train k lmDS models
+with different regularization λ over the same X — X^T X and X^T y are
+λ-independent, so a reuse-enabled runtime computes them once.
+
+`cross_validate_lm` is the CV workload of Fig. 7: k-fold cross
+validation where X_train = rbind(folds ∖ i); the compensation-plan
+rewrite decomposes gram/xtv over the rbind so per-fold partial products
+are computed once and summed per configuration ("multiplications of the
+individual folds and element-wise addition", §5.4).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.core import ops
+from repro.core.dag import LTensor, input_tensor
+from repro.core.runtime import LineageRuntime, get_runtime
+
+
+def grid_search_lm(X: LTensor, y: LTensor, lambdas: Sequence[float],
+                   runtime: Optional[LineageRuntime] = None
+                   ) -> tuple[np.ndarray, list[float]]:
+    """Train one lmDS model per λ; returns (betas [n, k], training losses)."""
+    rt = runtime or get_runtime()
+    n = X.shape[1]
+    betas, losses = [], []
+    for lam in lambdas:
+        A = ops.gram(X) + float(lam) * ops.eye(n)
+        b = ops.xtv(X, y)
+        beta_t = ops.solve(A, b)
+        resid = y - X @ beta_t
+        loss_t = ops.sum_(resid * resid)
+        beta_v, loss_v = rt.evaluate([beta_t, loss_t])
+        betas.append(beta_v)
+        losses.append(float(loss_v))
+    return np.concatenate(betas, axis=1), losses
+
+
+def make_folds(x: np.ndarray, y: np.ndarray, k: int, seed: int = 42
+               ) -> tuple[list[LTensor], list[LTensor]]:
+    """Split into k folds ONCE as leaf tensors — stable leaves are what
+    make per-fold intermediates reusable across fold iterations."""
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(x.shape[0])
+    idxs = np.array_split(perm, k)
+    fx = [input_tensor(f"foldX{i}", x[idx]) for i, idx in enumerate(idxs)]
+    fy = [input_tensor(f"foldY{i}", y[idx]) for i, idx in enumerate(idxs)]
+    return fx, fy
+
+
+def cross_validate_lm(folds_x: list[LTensor], folds_y: list[LTensor],
+                      reg: float = 1e-7,
+                      runtime: Optional[LineageRuntime] = None
+                      ) -> tuple[np.ndarray, list[float]]:
+    """k-fold CV for lmDS; returns (betas [n, k], held-out MSEs)."""
+    rt = runtime or get_runtime()
+    k = len(folds_x)
+    n = folds_x[0].shape[1]
+    betas, errors = [], []
+    for i in range(k):
+        tx = [f for j, f in enumerate(folds_x) if j != i]
+        ty = [f for j, f in enumerate(folds_y) if j != i]
+        X = ops.rbind(*tx)
+        y = ops.rbind(*ty)
+        A = ops.gram(X) + reg * ops.eye(n)
+        b = ops.xtv(X, y)
+        beta_t = ops.solve(A, b)
+        resid = folds_y[i] - folds_x[i] @ beta_t
+        mse_t = ops.mean_(resid * resid)
+        beta_v, mse_v = rt.evaluate([beta_t, mse_t])
+        betas.append(beta_v)
+        errors.append(float(mse_v))
+    return np.concatenate(betas, axis=1), errors

@@ -1,0 +1,3 @@
+"""Model zoo: the assigned architectures as composable JAX modules."""
+from .config import ModelConfig  # noqa: F401
+from .model import Model, build_model  # noqa: F401

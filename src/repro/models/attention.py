@@ -1,0 +1,251 @@
+"""GQA attention with memory-safe chunked softmax + KV-cache decode.
+
+Three execution paths for the core attention:
+  * "chunked" — q-chunk unrolled / kv-chunk scanned online softmax
+    (flash-attention algorithm in pure jnp; memory O(qc·kc); the CPU
+    dry-run + training path — causal skips fully-masked kv blocks, so
+    compiled FLOPs match flash semantics)
+  * "pallas"  — the TPU flash kernel (repro.kernels.flash_attention)
+  * "ref"     — full S² materialization (small shapes / oracle)
+
+Decode attends over a padded KV cache with position masking; under
+GSPMD a sequence-sharded cache turns the softmax reductions into
+partial-reduce + all-reduce (sequence parallelism for long contexts).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.hints import axis_size, shard_hint
+
+from . import layers
+from .layers import Params, cdtype, dense_init, rmsnorm, rmsnorm_init, apply_rope
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# core attention math
+# ---------------------------------------------------------------------------
+
+def _gqa_scores(q, k):
+    """q: (B, Sq, Hq, hd), k: (B, Sk, Hkv, hd) -> (B, Hkv, G, Sq, Sk)."""
+    B, Sq, Hq, hd = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, hd)
+    return jnp.einsum("bqhgd,bkhd->bhgqk", qg, k)
+
+
+def _gqa_out(probs, v):
+    """probs: (B, Hkv, G, Sq, Sk), v: (B, Sk, Hkv, vd) -> (B, Sq, Hq, vd)."""
+    B, Hkv, G, Sq, Sk = probs.shape
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v)
+    return out.reshape(B, Sq, Hkv * G, v.shape[-1])
+
+
+def ref_attention(q, k, v, *, causal: bool = True,
+                  q_offset: int = 0) -> jnp.ndarray:
+    scale = float(1.0 / np.sqrt(q.shape[-1]))
+    s = _gqa_scores(q * scale, k).astype(jnp.float32)
+    if causal:
+        qpos = jnp.arange(q.shape[1]) + q_offset
+        kpos = jnp.arange(k.shape[1])
+        mask = qpos[:, None] >= kpos[None, :]
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    return _gqa_out(p, v)
+
+
+def chunked_attention(q, k, v, *, causal: bool = True, q_chunk: int = 1024,
+                      k_chunk: int = 1024) -> jnp.ndarray:
+    """Online-softmax blockwise attention (flash algorithm, pure jnp).
+
+    The q loop is python-unrolled so each q block's kv scan covers only
+    the causally visible prefix — compiled FLOPs ≈ S²/2 like real flash.
+    """
+    B, Sq, Hq, hd = q.shape
+    Sk = k.shape[1]
+    vd = v.shape[-1]
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    qc = min(q_chunk, Sq)
+    kc = min(k_chunk, Sk)
+    assert Sq % qc == 0 and Sk % kc == 0
+    scale = float(1.0 / np.sqrt(hd))
+    nq, nk = Sq // qc, Sk // kc
+
+    # NOTE: no explicit hints inside the block loop — GSPMD propagates a
+    # joint (Hkv, G) head sharding from the _qkv hints that PartitionSpec
+    # cannot even express; hinting here was measured to cause
+    # "involuntary full rematerialization" reshard copies (§Perf log).
+    k_blocks = k.reshape(B, nk, kc, Hkv, hd).transpose(1, 0, 2, 3, 4)
+    v_blocks = v.reshape(B, nk, kc, Hkv, vd).transpose(1, 0, 2, 3, 4)
+    outs = []
+    for i in range(nq):
+        qi = q[:, i * qc:(i + 1) * qc] * scale          # (B, qc, Hq, hd)
+        qg = qi.reshape(B, qc, Hkv, G, hd)
+        if causal:
+            n_vis = min(((i + 1) * qc + kc - 1) // kc, nk)
+        else:
+            n_vis = nk
+        qpos = jnp.arange(i * qc, (i + 1) * qc)
+
+        @functools.partial(jax.checkpoint, prevent_cse=False)
+        def body(carry, blk):
+            # checkpointed: backward recomputes scores per block instead
+            # of saving the (qc, kc) probability tiles (flash semantics)
+            m, denom, acc, j = carry
+            kb, vb = blk                                 # (B, kc, Hkv, ·)
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, kb).astype(jnp.float32)
+            if causal:
+                kpos = j * kc + jnp.arange(kc)
+                mask = qpos[:, None] >= kpos[None, :]
+                s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            denom = denom * alpha + p.sum(axis=-1)
+            pv = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(q.dtype), vb)
+            acc = acc * alpha[..., None].astype(q.dtype) + pv
+            return (m_new, denom, acc, j + 1), None
+
+        init = (jnp.full((B, Hkv, G, qc), NEG_INF, jnp.float32),
+                jnp.zeros((B, Hkv, G, qc), jnp.float32),
+                jnp.zeros((B, Hkv, G, qc, vd), q.dtype),
+                jnp.zeros((), jnp.int32))
+        (m, denom, acc, _), _ = jax.lax.scan(
+            body, init, (k_blocks[:n_vis], v_blocks[:n_vis]))
+        out = acc / denom[..., None].astype(q.dtype)
+        outs.append(out.transpose(0, 3, 1, 2, 4).reshape(B, qc, Hq, vd))
+    return jnp.concatenate(outs, axis=1)
+
+
+def decode_attention(q, k_cache, v_cache, cur_len) -> jnp.ndarray:
+    """q: (B, 1, Hq, hd); caches: (B, S, Hkv, ·); cur_len: () int32.
+
+    Full-cache masked attention; reductions over the (possibly
+    sequence-sharded) cache axis compile to partial + all-reduce.
+    """
+    scale = float(1.0 / np.sqrt(q.shape[-1]))
+    s = _gqa_scores(q * scale, k_cache).astype(jnp.float32)
+    kpos = jnp.arange(k_cache.shape[1])
+    mask = kpos[None, :] < cur_len                     # (1, Sk)
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    return _gqa_out(p, v_cache)
+
+
+def attention_core(q, k, v, *, causal, cfg, impl: Optional[str] = None,
+                   q_offset: int = 0):
+    impl = impl or ("pallas" if cfg.use_pallas else "chunked")
+    if impl == "pallas":
+        from repro.kernels.flash_attention import ops as fops
+        return fops.flash_attention(q, k, v, causal=causal)
+    if impl == "chunked" and q.shape[1] > cfg.attn_chunk:
+        return chunked_attention(q, k, v, causal=causal,
+                                 q_chunk=cfg.attn_chunk,
+                                 k_chunk=cfg.attn_chunk)
+    return ref_attention(q, k, v, causal=causal, q_offset=q_offset)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention layer (llama/phi/qwen/musicgen/jamba-attn)
+# ---------------------------------------------------------------------------
+
+def gqa_init(key, cfg) -> Params:
+    d, hd = cfg.d_model, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {"wq": dense_init(ks[0], d, cfg.n_heads * hd),
+         "wk": dense_init(ks[1], d, cfg.kv_heads * hd),
+         "wv": dense_init(ks[2], d, cfg.kv_heads * hd),
+         "wo": dense_init(ks[3], cfg.n_heads * hd, d)}
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_init(hd)
+        p["k_norm"] = rmsnorm_init(hd)
+    return p
+
+
+def _qkv(p: Params, cfg, x, positions):
+    B, S, D = x.shape
+    hd = cfg.head_dim
+    dt = x.dtype
+    q = (x @ p["wq"].astype(dt)).reshape(B, S, cfg.n_heads, hd)
+    k = (x @ p["wk"].astype(dt)).reshape(B, S, cfg.kv_heads, hd)
+    v = (x @ p["wv"].astype(dt)).reshape(B, S, cfg.kv_heads, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q)
+        k = rmsnorm(p["k_norm"], k)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    # keep heads sharded on the model axis through attention (hint-gated;
+    # auto-sharding measurably replicates score tiles otherwise). When
+    # Hq doesn't divide the axis the hint degrades to the head-dim split.
+    if cfg.n_heads % max(axis_size("model"), 1) == 0:
+        q = shard_hint(q, "dp", None, "model", None)
+    k = shard_hint(k, "dp", None, "model", None)
+    v = shard_hint(v, "dp", None, "model", None)
+    return q, k, v
+
+
+def gqa_forward(p: Params, cfg, x, positions, impl: Optional[str] = None):
+    """Training / prefill: returns (out, (k, v)) for cache construction."""
+    q, k, v = _qkv(p, cfg, x, positions)
+    out = attention_core(q, k, v, causal=True, cfg=cfg, impl=impl)
+    return out.reshape(x.shape[0], x.shape[1], -1) @ p["wo"].astype(x.dtype), (k, v)
+
+
+def gqa_decode(p: Params, cfg, x, cache: tuple, cur_len):
+    """x: (B, 1, D); cache: (k (B,S,Hkv,hd), v); cur_len: scalar position."""
+    B = x.shape[0]
+    positions = jnp.full((B, 1), cur_len, dtype=jnp.int32)
+    q, k_new, v_new = _qkv(p, cfg, x, positions)
+    k_cache, v_cache = cache
+    k_cache = jax.lax.dynamic_update_slice_in_dim(
+        k_cache, k_new.astype(k_cache.dtype), cur_len, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(
+        v_cache, v_new.astype(v_cache.dtype), cur_len, axis=1)
+    out = decode_attention(q, k_cache.astype(x.dtype),
+                           v_cache.astype(x.dtype), cur_len + 1)
+    out = out.reshape(B, 1, -1) @ p["wo"].astype(x.dtype)
+    return out, (k_cache, v_cache)
+
+
+def gqa_cache_spec(cfg, batch: int, max_len: int):
+    shape = (batch, max_len, cfg.kv_heads, cfg.head_dim)
+    return (jax.ShapeDtypeStruct(shape, cdtype(cfg)),
+            jax.ShapeDtypeStruct(shape, cdtype(cfg)))
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention layer (llama-3.2-vision image layers)
+# ---------------------------------------------------------------------------
+
+def xattn_init(key, cfg) -> Params:
+    d, hd = cfg.d_model, cfg.head_dim
+    ks = jax.random.split(key, 5)
+    return {"wq": dense_init(ks[0], d, cfg.n_heads * hd),
+            "wk": dense_init(ks[1], d, cfg.kv_heads * hd),
+            "wv": dense_init(ks[2], d, cfg.kv_heads * hd),
+            "wo": dense_init(ks[3], cfg.n_heads * hd, d),
+            "gate": jnp.zeros((1,), dtype=jnp.float32)}
+
+
+def xattn_forward(p: Params, cfg, x, image_embeds,
+                  impl: Optional[str] = None):
+    """Cross-attend text states to (precomputed) image embeddings."""
+    B, S, D = x.shape
+    hd = cfg.head_dim
+    dt = x.dtype
+    n_img = image_embeds.shape[1]
+    q = (x @ p["wq"].astype(dt)).reshape(B, S, cfg.n_heads, hd)
+    k = (image_embeds @ p["wk"].astype(dt)).reshape(B, n_img, cfg.kv_heads, hd)
+    v = (image_embeds @ p["wv"].astype(dt)).reshape(B, n_img, cfg.kv_heads, hd)
+    out = attention_core(q, k, v, causal=False, cfg=cfg, impl=impl)
+    out = out.reshape(B, S, -1) @ p["wo"].astype(dt)
+    return jnp.tanh(p["gate"]).astype(dt) * out

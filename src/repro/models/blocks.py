@@ -1,0 +1,192 @@
+"""Layer blocks: per-kind init / train-forward / decode-step.
+
+A `kind` string names one residual layer's composition:
+  "attn"            self-attention + dense MLP        (dense/audio/vlm self)
+  "attn+moe"        self-attention + MoE FFN          (deepseek, jamba-attn)
+  "attn+mlp_first"  dense first layers of deepseek models
+  "xattn"           cross-attention (image) + MLP     (llama-vision)
+  "mamba"           mamba mixer + dense MLP           (jamba)
+  "mamba+moe"       mamba mixer + MoE FFN             (jamba)
+  "rwkv6"           rwkv6 time-mix + channel-mix      (finch)
+
+All blocks are pre-norm residual. Decode carries a per-layer cache whose
+pytree structure is fixed per kind (see `cache_spec`).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn_mod
+from . import mamba as mamba_mod
+from . import mla as mla_mod
+from . import moe as moe_mod
+from . import rwkv6 as rwkv_mod
+from .layers import Params, cdtype, mlp, mlp_init, rmsnorm, rmsnorm_init
+
+
+def _attn_init(key, cfg):
+    if cfg.attn_type == "mla":
+        return mla_mod.mla_init(key, cfg)
+    return attn_mod.gqa_init(key, cfg)
+
+
+def block_init(key, cfg, kind: str) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p: Params = {"norm1": rmsnorm_init(cfg.d_model),
+                 "norm2": rmsnorm_init(cfg.d_model)}
+    if kind == "rwkv6":
+        p["rwkv"] = rwkv_mod.rwkv6_init(k1, cfg)
+        return p
+    if kind.startswith("attn"):
+        p["attn"] = _attn_init(k1, cfg)
+    elif kind == "xattn":
+        p["xattn"] = attn_mod.xattn_init(k1, cfg)
+    elif kind.startswith("mamba"):
+        p["mamba"] = mamba_mod.mamba_init(k1, cfg)
+    if kind.endswith("+moe"):
+        p["moe"] = moe_mod.moe_init(k2, cfg)
+    else:
+        p["mlp"] = mlp_init(k2, cfg.d_model, cfg.d_ff)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# training / prefill forward
+# ---------------------------------------------------------------------------
+
+def block_forward(p: Params, cfg, kind: str, x, positions,
+                  image_embeds=None, collect_cache: bool = False):
+    """Returns (x, aux_loss, cache-or-None)."""
+    aux = jnp.zeros((), jnp.float32)
+    cache = None
+    if kind == "rwkv6":
+        # token-shift state starts at zeros for a fresh sequence
+        y, shift_tm, wkv_state = rwkv_mod.time_mix(
+            p["rwkv"], cfg, rmsnorm(p["norm1"], x), None,
+            jnp.zeros((x.shape[0], cfg.d_model // cfg.rwkv_head_dim,
+                       cfg.rwkv_head_dim, cfg.rwkv_head_dim), jnp.float32))
+        x = x + y
+        y, shift_cm = rwkv_mod.channel_mix(p["rwkv"],
+                                           rmsnorm(p["norm2"], x), None)
+        x = x + y
+        if collect_cache:
+            cache = {"wkv": wkv_state, "shift_tm": shift_tm.astype(cdtype(cfg)),
+                     "shift_cm": shift_cm.astype(cdtype(cfg))}
+        return x, aux, cache
+
+    if kind.startswith("attn"):
+        h = rmsnorm(p["norm1"], x)
+        if cfg.attn_type == "mla":
+            y, kv = mla_mod.mla_forward(p["attn"], cfg, h, positions)
+        else:
+            y, kv = attn_mod.gqa_forward(p["attn"], cfg, h, positions)
+        x = x + y
+        if collect_cache:
+            cache = tuple(t.astype(cdtype(cfg)) for t in kv)
+    elif kind == "xattn":
+        h = rmsnorm(p["norm1"], x)
+        y = attn_mod.xattn_forward(p["xattn"], cfg, h, image_embeds)
+        x = x + y
+        if collect_cache:
+            # cache the image K/V so decode never re-encodes the image
+            dt = x.dtype
+            B, n_img = image_embeds.shape[:2]
+            k = (image_embeds @ p["xattn"]["wk"].astype(dt)).reshape(
+                B, n_img, cfg.kv_heads, cfg.head_dim)
+            v = (image_embeds @ p["xattn"]["wv"].astype(dt)).reshape(
+                B, n_img, cfg.kv_heads, cfg.head_dim)
+            cache = (k.astype(cdtype(cfg)), v.astype(cdtype(cfg)))
+    elif kind.startswith("mamba"):
+        h = rmsnorm(p["norm1"], x)
+        y, state = mamba_mod.mamba_forward(p["mamba"], cfg, h)
+        x = x + y
+        if collect_cache:
+            cache = {"h": state["h"],
+                     "conv": state["conv"].astype(cdtype(cfg))}
+
+    h2 = rmsnorm(p["norm2"], x)
+    if kind.endswith("+moe"):
+        y, aux = moe_mod.moe_forward(p["moe"], cfg, h2)
+    else:
+        y = mlp(p["mlp"], h2)
+    return x + y, aux, cache
+
+
+# ---------------------------------------------------------------------------
+# decode step (one token)
+# ---------------------------------------------------------------------------
+
+def block_decode(p: Params, cfg, kind: str, x, cache, cur_len):
+    """x: (B, 1, D); returns (x, new_cache)."""
+    if kind == "rwkv6":
+        y, shift_tm, wkv_state = rwkv_mod.time_mix(
+            p["rwkv"], cfg, rmsnorm(p["norm1"], x),
+            cache["shift_tm"].astype(x.dtype), cache["wkv"], decode=True)
+        x = x + y
+        y, shift_cm = rwkv_mod.channel_mix(
+            p["rwkv"], rmsnorm(p["norm2"], x),
+            cache["shift_cm"].astype(x.dtype))
+        x = x + y
+        new_cache = {"wkv": wkv_state,
+                     "shift_tm": shift_tm.astype(cache["shift_tm"].dtype),
+                     "shift_cm": shift_cm.astype(cache["shift_cm"].dtype)}
+        return x, new_cache
+
+    if kind.startswith("attn"):
+        h = rmsnorm(p["norm1"], x)
+        if cfg.attn_type == "mla":
+            y, new_cache = mla_mod.mla_decode(p["attn"], cfg, h, cache,
+                                              cur_len)
+        else:
+            y, new_cache = attn_mod.gqa_decode(p["attn"], cfg, h, cache,
+                                               cur_len)
+        x = x + y
+    elif kind == "xattn":
+        h = rmsnorm(p["norm1"], x)
+        k_img, v_img = cache
+        B = x.shape[0]
+        dt = x.dtype
+        q = (h @ p["xattn"]["wq"].astype(dt)).reshape(
+            B, 1, cfg.n_heads, cfg.head_dim)
+        out = attn_mod.ref_attention(q, k_img.astype(dt), v_img.astype(dt),
+                                     causal=False)
+        y = out.reshape(B, 1, -1) @ p["xattn"]["wo"].astype(dt)
+        x = x + jnp.tanh(p["xattn"]["gate"]).astype(dt) * y
+        new_cache = cache
+    elif kind.startswith("mamba"):
+        h = rmsnorm(p["norm1"], x)
+        state = {"h": cache["h"], "conv": cache["conv"].astype(x.dtype)}
+        y, new_state = mamba_mod.mamba_forward(p["mamba"], cfg, h,
+                                               state, decode=True)
+        x = x + y
+        new_cache = {"h": new_state["h"],
+                     "conv": new_state["conv"].astype(cache["conv"].dtype)}
+
+    h2 = rmsnorm(p["norm2"], x)
+    if kind.endswith("+moe"):
+        y, _ = moe_mod.moe_forward(p["moe"], cfg, h2)
+    else:
+        y = mlp(p["mlp"], h2)
+    return x + y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# cache specs
+# ---------------------------------------------------------------------------
+
+def cache_spec(cfg, kind: str, batch: int, max_len: int):
+    if kind == "rwkv6":
+        return rwkv_mod.rwkv6_state_spec(cfg, batch)
+    if kind.startswith("attn"):
+        if cfg.attn_type == "mla":
+            return mla_mod.mla_cache_spec(cfg, batch, max_len)
+        return attn_mod.gqa_cache_spec(cfg, batch, max_len)
+    if kind == "xattn":
+        shape = (batch, cfg.n_image_tokens, cfg.kv_heads, cfg.head_dim)
+        return (jax.ShapeDtypeStruct(shape, cdtype(cfg)),) * 2
+    if kind.startswith("mamba"):
+        return mamba_mod.mamba_state_spec(cfg, batch)
+    raise ValueError(kind)

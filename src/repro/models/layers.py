@@ -1,0 +1,176 @@
+"""Shared transformer layers: norms, RoPE, SwiGLU, embeddings, chunked CE.
+
+Conventions:
+  * params are plain nested dicts of jnp arrays (pytrees), stored in f32;
+    compute casts to cfg.dtype (bf16 on TPU).
+  * activations: (B, S, D); attention heads (B, S, H, hd).
+  * the output-projection / loss path is chunked over the sequence so the
+    (B, S, V) logits tensor never materializes (V up to 152k).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.hints import shard_hint
+
+Params = dict
+
+
+def cdtype(cfg) -> jnp.dtype:
+    return jnp.dtype(cfg.dtype)
+
+
+# -- init helpers -------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, scale: Optional[float] = None
+               ) -> jnp.ndarray:
+    scale = scale if scale is not None else 1.0 / np.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), dtype=jnp.float32)
+            * scale)
+
+
+def embed_init(key, vocab: int, d: int) -> jnp.ndarray:
+    return jax.random.normal(key, (vocab, d), dtype=jnp.float32) * 0.02
+
+
+# -- RMSNorm -------------------------------------------------------------------
+
+def rmsnorm_init(d: int) -> Params:
+    return {"scale": jnp.ones((d,), dtype=jnp.float32)}
+
+
+def rmsnorm(p: Params, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * p["scale"]
+    return out.astype(dt)
+
+
+# -- RoPE ---------------------------------------------------------------------
+
+def rope_freqs(dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float
+               ) -> jnp.ndarray:
+    """x: (B, S, H, hd); positions: (B, S) int32."""
+    dim = x.shape[-1]
+    freqs = rope_freqs(dim, theta)                      # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B,S,hd/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                          axis=-1)
+    return out.astype(x.dtype)
+
+
+# -- SwiGLU MLP ----------------------------------------------------------------
+
+def mlp_init(key, d: int, d_ff: int) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"w_gate": dense_init(k1, d, d_ff),
+            "w_up": dense_init(k2, d, d_ff),
+            "w_down": dense_init(k3, d_ff, d)}
+
+
+def mlp(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    dt = x.dtype
+    g = x @ p["w_gate"].astype(dt)
+    u = x @ p["w_up"].astype(dt)
+    return (jax.nn.silu(g) * u) @ p["w_down"].astype(dt)
+
+
+# -- Embedding + chunked loss ---------------------------------------------------
+
+def embedding_init(key, cfg) -> Params:
+    n_books = cfg.n_codebooks or 1
+    keys = jax.random.split(key, n_books + 1)
+    p: Params = {}
+    if n_books == 1:
+        p["tok"] = embed_init(keys[0], cfg.vocab_size, cfg.d_model)
+    else:  # musicgen: one table per codebook; embeddings are summed
+        p["books"] = jnp.stack([
+            embed_init(keys[i], cfg.vocab_size, cfg.d_model)
+            for i in range(n_books)])
+    return p
+
+
+def embed_tokens(p: Params, cfg, tokens: jnp.ndarray) -> jnp.ndarray:
+    """tokens: (B, S) or (B, S, n_books) for multi-codebook audio."""
+    dt = cdtype(cfg)
+    if cfg.n_codebooks:
+        # (B, S, K) -> sum_k books[k][tokens[..., k]]
+        outs = 0
+        for k in range(cfg.n_codebooks):
+            outs = outs + jnp.take(p["books"][k], tokens[..., k], axis=0)
+        return outs.astype(dt)
+    return jnp.take(p["tok"], tokens, axis=0).astype(dt)
+
+
+def head_init(key, cfg) -> Params:
+    n_books = cfg.n_codebooks or 1
+    if n_books == 1:
+        return {"w": dense_init(key, cfg.d_model, cfg.vocab_size, scale=0.02)}
+    keys = jax.random.split(key, n_books)
+    return {"w": jnp.stack([
+        dense_init(keys[k], cfg.d_model, cfg.vocab_size, scale=0.02)
+        for k in range(n_books)])}
+
+
+def logits_last(p: Params, cfg, h_last: jnp.ndarray) -> jnp.ndarray:
+    """h_last: (B, D) -> logits (B, V) (or (B, K, V) multi-codebook)."""
+    dt = h_last.dtype
+    if cfg.n_codebooks:
+        return jnp.einsum("bd,kdv->bkv", h_last, p["w"].astype(dt))
+    return h_last @ p["w"].astype(dt)
+
+
+def chunked_cross_entropy(p: Params, cfg, h: jnp.ndarray,
+                          labels: jnp.ndarray) -> jnp.ndarray:
+    """Mean next-token CE without materializing (B, S, V).
+
+    h: (B, S, D) final hidden states; labels: (B, S) int32 (or
+    (B, S, K) multi-codebook). Scans over sequence chunks; each chunk
+    computes its logits, logsumexp, and label log-prob.
+    """
+    B, S, D = h.shape
+    c = min(cfg.loss_chunk, S)
+    assert S % c == 0, (S, c)
+    w = p["w"].astype(h.dtype)
+
+    @functools.partial(jax.checkpoint, prevent_cse=False)
+    def chunk_loss(h_c, y_c):
+        # checkpointed: backward recomputes the (B, c, V) logits chunk
+        # instead of saving it (V up to 152k — this is what keeps the
+        # loss within HBM at train_4k)
+        if cfg.n_codebooks:
+            logits = jnp.einsum("bsd,kdv->bskv", h_c, w)
+        else:
+            logits = h_c @ w                       # (B, c, V)
+        logits = shard_hint(logits.astype(jnp.float32), "dp", None, "model")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, y_c[..., None], axis=-1)[..., 0]
+        return jnp.sum(lse - ll)
+
+    hs = h.reshape(B, S // c, c, D).swapaxes(0, 1)     # (n, B, c, D)
+    if cfg.n_codebooks:
+        ys = labels.reshape(B, S // c, c, cfg.n_codebooks).swapaxes(0, 1)
+    else:
+        ys = labels.reshape(B, S // c, c).swapaxes(0, 1)
+
+    def body(acc, xs):
+        h_c, y_c = xs
+        return acc + chunk_loss(h_c, y_c), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (hs, ys))
+    denom = labels.size
+    return total / denom

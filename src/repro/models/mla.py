@@ -1,0 +1,131 @@
+"""Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434).
+
+KV states are compressed into a rank-`kv_lora_rank` latent c_kv plus a
+single shared RoPE key. Train/prefill expands per-head K/V from the
+latent; decode runs in *absorbed* form — scores and context are computed
+directly against the compressed cache, so the per-token cache is just
+(kv_lora_rank + rope_head_dim) floats instead of 2·H·hd.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.hints import shard_hint
+
+from .attention import NEG_INF, attention_core
+from .layers import (Params, apply_rope, cdtype, dense_init, rmsnorm,
+                     rmsnorm_init)
+
+
+def mla_init(key, cfg) -> Params:
+    d = cfg.d_model
+    nh, dn, dr, dv = cfg.n_heads, cfg.head_dim, cfg.rope_head_dim, cfg.vdim
+    L, qL = cfg.kv_lora_rank, cfg.q_lora_rank
+    ks = jax.random.split(key, 8)
+    p: Params = {}
+    if qL:
+        p["wq_a"] = dense_init(ks[0], d, qL)
+        p["q_norm"] = rmsnorm_init(qL)
+        p["wq_b"] = dense_init(ks[1], qL, nh * (dn + dr))
+    else:
+        p["wq"] = dense_init(ks[1], d, nh * (dn + dr))
+    p["wkv_a"] = dense_init(ks[2], d, L + dr)
+    p["kv_norm"] = rmsnorm_init(L)
+    p["wkv_b_k"] = (jax.random.normal(ks[3], (L, nh, dn), jnp.float32)
+                    / np.sqrt(L))
+    p["wkv_b_v"] = (jax.random.normal(ks[4], (L, nh, dv), jnp.float32)
+                    / np.sqrt(L))
+    p["wo"] = dense_init(ks[5], nh * dv, d)
+    return p
+
+
+def _queries(p: Params, cfg, x, positions):
+    B, S, _ = x.shape
+    nh, dn, dr = cfg.n_heads, cfg.head_dim, cfg.rope_head_dim
+    dt = x.dtype
+    if cfg.q_lora_rank:
+        cq = rmsnorm(p["q_norm"], x @ p["wq_a"].astype(dt))
+        q = (cq @ p["wq_b"].astype(dt)).reshape(B, S, nh, dn + dr)
+    else:
+        q = (x @ p["wq"].astype(dt)).reshape(B, S, nh, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    q_nope = shard_hint(q_nope, "dp", None, "model", None)
+    q_rope = shard_hint(q_rope, "dp", None, "model", None)
+    return q_nope, q_rope
+
+
+def _latents(p: Params, cfg, x, positions):
+    dt = x.dtype
+    L, dr = cfg.kv_lora_rank, cfg.rope_head_dim
+    ckv_full = x @ p["wkv_a"].astype(dt)               # (B, S, L + dr)
+    c_kv = rmsnorm(p["kv_norm"], ckv_full[..., :L])
+    k_rope = ckv_full[..., L:][:, :, None, :]          # (B, S, 1, dr)
+    k_rope = apply_rope(k_rope, positions, cfg.rope_theta)
+    return c_kv, k_rope[:, :, 0, :]
+
+
+def mla_forward(p: Params, cfg, x, positions,
+                impl: Optional[str] = None):
+    """Training / prefill path: expand per-head K/V from the latent."""
+    B, S, _ = x.shape
+    nh, dn, dr, dv = cfg.n_heads, cfg.head_dim, cfg.rope_head_dim, cfg.vdim
+    dt = x.dtype
+    q_nope, q_rope = _queries(p, cfg, x, positions)
+    c_kv, k_rope = _latents(p, cfg, x, positions)
+    k_nope = shard_hint(
+        jnp.einsum("bsl,lhd->bshd", c_kv, p["wkv_b_k"].astype(dt)),
+        "dp", None, "model", None)
+    v = shard_hint(
+        jnp.einsum("bsl,lhd->bshd", c_kv, p["wkv_b_v"].astype(dt)),
+        "dp", None, "model", None)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (B, S, nh, dr))],
+        axis=-1)
+    # pad v to q/k head size so GQA core can run, then slice back
+    out = attention_core(q, k, jnp.pad(v, ((0, 0),) * 3 + ((0, dn + dr - dv),)),
+                         causal=True, cfg=cfg, impl=impl)[..., :dv]
+    out = out.reshape(B, S, nh * dv)
+    cache = (c_kv, k_rope)
+    return out @ p["wo"].astype(dt), cache
+
+
+def mla_decode(p: Params, cfg, x, cache, cur_len):
+    """Absorbed decode: attention directly over the compressed cache."""
+    B = x.shape[0]
+    nh, dn, dr, dv = cfg.n_heads, cfg.head_dim, cfg.rope_head_dim, cfg.vdim
+    dt = x.dtype
+    positions = jnp.full((B, 1), cur_len, dtype=jnp.int32)
+    q_nope, q_rope = _queries(p, cfg, x, positions)     # (B,1,nh,·)
+    c_new, kr_new = _latents(p, cfg, x, positions)      # (B,1,L), (B,1,dr)
+    ckv_cache, kr_cache = cache
+    ckv_cache = jax.lax.dynamic_update_slice_in_dim(
+        ckv_cache, c_new.astype(ckv_cache.dtype), cur_len, axis=1)
+    kr_cache = jax.lax.dynamic_update_slice_in_dim(
+        kr_cache, kr_new.astype(kr_cache.dtype), cur_len, axis=1)
+
+    # absorb wkv_b_k into the query: (B,1,nh,dn)·(L,nh,dn) -> (B,1,nh,L)
+    q_abs = jnp.einsum("bqhd,lhd->bqhl", q_nope, p["wkv_b_k"].astype(dt))
+    ck = ckv_cache.astype(dt)
+    scores = (jnp.einsum("bqhl,bsl->bhqs", q_abs, ck)
+              + jnp.einsum("bqhd,bsd->bhqs", q_rope, kr_cache.astype(dt)))
+    scores = scores.astype(jnp.float32) / float(np.sqrt(dn + dr))
+    mask = jnp.arange(ck.shape[1])[None, :] < (cur_len + 1)
+    scores = jnp.where(mask[None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(dt)
+    ctx = jnp.einsum("bhqs,bsl->bqhl", probs, ck)       # (B,1,nh,L)
+    out = jnp.einsum("bqhl,lhd->bqhd", ctx, p["wkv_b_v"].astype(dt))
+    out = out.reshape(B, 1, nh * dv) @ p["wo"].astype(dt)
+    return out, (ckv_cache, kr_cache)
+
+
+def mla_cache_spec(cfg, batch: int, max_len: int):
+    return (jax.ShapeDtypeStruct((batch, max_len, cfg.kv_lora_rank),
+                                 cdtype(cfg)),
+            jax.ShapeDtypeStruct((batch, max_len, cfg.rope_head_dim),
+                                 cdtype(cfg)))

@@ -1,0 +1,233 @@
+"""Unified Model: init / forward / loss / prefill / decode for every family.
+
+Layer stacking: `first_dense_layers` run unscanned; the remaining layers
+are grouped into identical *periods* (the repeating heterogeneous
+super-block — 1 layer for homogeneous archs, 8 for jamba, 5 for the
+vision model) and scanned with stacked parameters. `cfg.remat`
+checkpoints the period body (activation rematerialization).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.hints import shard_hint
+
+from . import blocks
+from .config import ModelConfig
+from .layers import (Params, cdtype, chunked_cross_entropy, embed_tokens,
+                     embedding_init, head_init, logits_last, rmsnorm,
+                     rmsnorm_init)
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.kinds = cfg.layer_kinds()
+
+    # ------------------------------------------------------------------
+    # parameters
+    # ------------------------------------------------------------------
+    def init(self, rng: jax.Array) -> Params:
+        cfg = self.cfg
+        k_embed, k_head, k_prefix, k_periods = jax.random.split(rng, 4)
+        params: Params = {
+            "embed": embedding_init(k_embed, cfg),
+            "head": head_init(k_head, cfg),
+            "final_norm": rmsnorm_init(cfg.d_model),
+        }
+        if cfg.first_dense_layers:
+            pk = jax.random.split(k_prefix, cfg.first_dense_layers)
+            params["prefix"] = [
+                blocks.block_init(pk[i], cfg, "attn+mlp_first")
+                for i in range(cfg.first_dense_layers)]
+
+        def init_period(key):
+            ks = jax.random.split(key, len(self.kinds))
+            return {f"{i}:{kind}": blocks.block_init(ks[i], cfg, kind)
+                    for i, kind in enumerate(self.kinds)}
+
+        period_keys = jax.random.split(k_periods, cfg.n_periods())
+        if cfg.scan_layers:
+            params["periods"] = jax.vmap(init_period)(period_keys)
+        else:
+            params["periods"] = [init_period(k) for k in period_keys]
+        return params
+
+    def param_shapes(self) -> Params:
+        return jax.eval_shape(self.init, jax.random.PRNGKey(0))
+
+    def n_params(self) -> int:
+        import numpy as np
+        return sum(int(np.prod(l.shape))
+                   for l in jax.tree_util.tree_leaves(self.param_shapes()))
+
+    # ------------------------------------------------------------------
+    # forward (train / prefill share this body)
+    # ------------------------------------------------------------------
+    def forward(self, params: Params, tokens: jnp.ndarray, *,
+                image_embeds: Optional[jnp.ndarray] = None,
+                collect_cache: bool = False):
+        """Returns (h_final (B,S,D), aux_loss, caches-or-None)."""
+        cfg = self.cfg
+        x = embed_tokens(params["embed"], cfg, tokens)
+        B, S = x.shape[0], x.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None],
+                                     (B, S))
+        aux_total = jnp.zeros((), jnp.float32)
+        prefix_caches = []
+        for p in params.get("prefix", []):
+            x, aux, c = blocks.block_forward(
+                p, cfg, "attn+mlp_first", x, positions, image_embeds,
+                collect_cache=collect_cache)
+            aux_total = aux_total + aux
+            prefix_caches.append(c)
+
+        def period_body(x, period_params):
+            # sequence-parallel boundary: the residual stream (and thus
+            # the per-layer remat checkpoint) is stored sharded on the
+            # model axis — 16× less checkpointed activation memory
+            x = shard_hint(x, "dp", "model", None)
+            aux_p = jnp.zeros((), jnp.float32)
+            caches = {}
+            for i, kind in enumerate(self.kinds):
+                x, aux, c = blocks.block_forward(
+                    period_params[f"{i}:{kind}"], cfg, kind, x, positions,
+                    image_embeds, collect_cache=collect_cache)
+                aux_p = aux_p + aux
+                if collect_cache:
+                    caches[f"{i}:{kind}"] = c
+            return x, (aux_p, caches if collect_cache else None)
+
+        if cfg.scan_layers:
+            body = period_body
+            if cfg.remat:
+                body = jax.checkpoint(period_body,
+                                      prevent_cse=False)
+            x, (auxes, caches) = jax.lax.scan(body, x, params["periods"])
+            aux_total = aux_total + auxes.sum()
+        else:
+            caches_list = []
+            for pp in params["periods"]:
+                x, (aux_p, c) = period_body(x, pp)
+                aux_total = aux_total + aux_p
+                caches_list.append(c)
+            caches = caches_list if collect_cache else None
+
+        x = rmsnorm(params["final_norm"], x)
+        all_caches = {"prefix": prefix_caches, "periods": caches} \
+            if collect_cache else None
+        return x, aux_total, all_caches
+
+    # ------------------------------------------------------------------
+    # losses / serving
+    # ------------------------------------------------------------------
+    def loss(self, params: Params, batch: dict) -> tuple[jnp.ndarray, dict]:
+        """batch: {'tokens', 'labels', optional 'image_embeds'}."""
+        h, aux, _ = self.forward(params, batch["tokens"],
+                                 image_embeds=batch.get("image_embeds"))
+        ce = chunked_cross_entropy(params["head"], self.cfg, h,
+                                   batch["labels"])
+        loss = ce + 0.01 * aux
+        return loss, {"ce": ce, "aux": aux}
+
+    def prefill(self, params: Params, tokens, *, max_len: int,
+                image_embeds=None):
+        """Process a prompt; returns (next-token logits (B,V), caches).
+
+        Attention caches are allocated at `max_len` and filled with the
+        prompt's K/V (prompt length = tokens.shape[1])."""
+        cfg = self.cfg
+        h, _, caches = self.forward(params, tokens,
+                                    image_embeds=image_embeds,
+                                    collect_cache=True)
+        S = tokens.shape[1]
+        caches = _pad_seq_caches(self, caches, tokens.shape[0], S, max_len)
+        logits = logits_last(params["head"], cfg, h[:, -1])
+        return logits, caches
+
+    def decode_step(self, params: Params, token, caches, cur_len):
+        """token: (B, 1) (or (B,1,K) audio); cur_len: () int32 current
+        sequence length (number of tokens already in the cache)."""
+        cfg = self.cfg
+        x = embed_tokens(params["embed"], cfg, token)
+        new_prefix = []
+        for p, c in zip(params.get("prefix", []), caches["prefix"]):
+            x, c2 = blocks.block_decode(p, cfg, "attn+mlp_first", x, c,
+                                        cur_len)
+            new_prefix.append(c2)
+
+        def period_body(x, xs):
+            period_params, cache = xs
+            new_cache = {}
+            for i, kind in enumerate(self.kinds):
+                key = f"{i}:{kind}"
+                x, new_cache[key] = blocks.block_decode(
+                    period_params[key], cfg, kind, x, cache[key], cur_len)
+            return x, new_cache
+
+        if cfg.scan_layers:
+            x, new_period_caches = jax.lax.scan(
+                period_body, x, (params["periods"], caches["periods"]))
+        else:
+            new_period_caches = []
+            for pp, c in zip(params["periods"], caches["periods"]):
+                x, c2 = period_body(x, (pp, c))
+                new_period_caches.append(c2)
+
+        x = rmsnorm(params["final_norm"], x)
+        logits = logits_last(params["head"], cfg, x[:, -1])
+        return logits, {"prefix": new_prefix, "periods": new_period_caches}
+
+    # ------------------------------------------------------------------
+    # cache specs (ShapeDtypeStructs — for dry-run and allocation)
+    # ------------------------------------------------------------------
+    def cache_shapes(self, batch: int, max_len: int):
+        cfg = self.cfg
+        prefix = [blocks.cache_spec(cfg, "attn+mlp_first", batch, max_len)
+                  for _ in range(cfg.first_dense_layers)]
+        period = {f"{i}:{kind}": blocks.cache_spec(cfg, kind, batch, max_len)
+                  for i, kind in enumerate(self.kinds)}
+        n = cfg.n_periods()
+
+        def stack(s):
+            return jax.ShapeDtypeStruct((n,) + s.shape, s.dtype)
+
+        periods = jax.tree_util.tree_map(stack, period) if cfg.scan_layers \
+            else [period] * n
+        return {"prefix": prefix, "periods": periods}
+
+    def init_cache(self, batch: int, max_len: int):
+        return jax.tree_util.tree_map(
+            lambda s: jnp.zeros(s.shape, s.dtype),
+            self.cache_shapes(batch, max_len))
+
+
+def _pad_seq_caches(model: "Model", caches, batch: int, S: int,
+                    max_len: int):
+    """Pad seq-carrying cache leaves from S to max_len.
+
+    The seq axis is located *exactly* by diffing the cache-shape trees at
+    the two lengths (no positional heuristics — scan-stacked leaves carry
+    the sequence on axis 2, unstacked on axis 1, states not at all)."""
+    if max_len == S:
+        return caches
+    small = model.cache_shapes(batch, S)
+    big = model.cache_shapes(batch, max_len)
+
+    def pad(leaf, s_spec, b_spec):
+        if not hasattr(leaf, "ndim"):
+            return leaf
+        pads = [(0, b - a) for a, b in zip(s_spec.shape, b_spec.shape)]
+        if all(p == (0, 0) for p in pads):
+            return leaf
+        return jnp.pad(leaf, pads)
+
+    return jax.tree_util.tree_map(pad, caches, small, big)
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

@@ -1,0 +1,247 @@
+"""RWKV-6 "Finch" block (arXiv:2404.05892) — attention-free, data-dependent
+per-channel decay.
+
+Time-mix uses the chunked WKV form (GLA-style): intra-chunk is an
+attention-like triangular matmul with relative decays, inter-chunk is a
+rank-dh state passed through a scan — O(S·C·dh) instead of O(S²), and
+decode is O(1) per token from the recurrent state. The Pallas kernel
+(repro.kernels.rwkv6) implements the same chunked algorithm per
+(batch, head) grid cell; this module is the pure-JAX path (and oracle
+feedstock).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import Params, dense_init, rmsnorm, rmsnorm_init
+
+LORA_SHIFT = 32     # token-shift ddlerp lora rank
+LORA_DECAY = 64     # decay lora rank
+SUB = 16            # intra-chunk sub-block for the stable factorization
+MAX_DECAY = 5.0     # per-step |log w| clamp: decays stronger than e^-5
+                    # per step are numerically indistinguishable after a
+                    # few tokens; clamping keeps every factored exponent
+                    # within |SUB · MAX_DECAY| = 80 < f32's exp range.
+
+
+def rwkv6_init(key, cfg) -> Params:
+    d = cfg.d_model
+    dh = cfg.rwkv_head_dim
+    H = d // dh
+    ks = jax.random.split(key, 16)
+    p: Params = {
+        # token-shift ddlerp
+        "mu_x": jnp.zeros((d,), jnp.float32) + 0.5,
+        "mu": jnp.full((5, d), 0.5, jnp.float32),      # r,k,v,w,g
+        "tm_w1": dense_init(ks[0], d, 5 * LORA_SHIFT, scale=0.01),
+        "tm_w2": (jax.random.normal(ks[1], (5, LORA_SHIFT, d), jnp.float32)
+                  * 0.01),
+        # projections
+        "wr": dense_init(ks[2], d, d),
+        "wk": dense_init(ks[3], d, d),
+        "wv": dense_init(ks[4], d, d),
+        "wg": dense_init(ks[5], d, d),
+        "wo": dense_init(ks[6], d, d),
+        # data-dependent decay
+        "w0": jnp.full((d,), -1.0, jnp.float32),
+        "wA": dense_init(ks[7], d, LORA_DECAY, scale=0.01),
+        "wB": dense_init(ks[8], LORA_DECAY, d, scale=0.01),
+        # bonus + output norm (per-head group norm)
+        "u": jax.random.normal(ks[9], (H, dh), jnp.float32) * 0.1,
+        "ln_x": {"scale": jnp.ones((d,), jnp.float32),
+                 "bias": jnp.zeros((d,), jnp.float32)},
+        # channel mix
+        "mu_rc": jnp.full((d,), 0.5, jnp.float32),
+        "mu_kc": jnp.full((d,), 0.5, jnp.float32),
+        "wr_c": dense_init(ks[10], d, d),
+        "wk_c": dense_init(ks[11], d, cfg.d_ff),
+        "wv_c": dense_init(ks[12], cfg.d_ff, d),
+    }
+    return p
+
+
+def _token_shift(x: jnp.ndarray, prev: Optional[jnp.ndarray]) -> jnp.ndarray:
+    """Shift sequence right by one; `prev` is the carry for decode."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def _ddlerp(p: Params, x, xprev):
+    """Data-dependent lerp producing the 5 mixed inputs (r,k,v,w,g)."""
+    xx = xprev - x
+    base = x + xx * p["mu_x"].astype(x.dtype)
+    lora = jnp.tanh(base @ p["tm_w1"].astype(x.dtype))
+    B, S, _ = x.shape
+    lora = lora.reshape(B, S, 5, LORA_SHIFT)
+    delta = jnp.einsum("bsfl,fld->fbsd", lora, p["tm_w2"].astype(x.dtype))
+    mixed = x[None] + xx[None] * (p["mu"].astype(x.dtype)[:, None, None]
+                                  + delta)
+    return mixed  # (5, B, S, D)
+
+
+def _group_norm(p: Params, y: jnp.ndarray, H: int) -> jnp.ndarray:
+    """Per-head group norm over the head channel (ln_x in RWKV)."""
+    B, S, D = y.shape
+    dh = D // H
+    yh = y.reshape(B, S, H, dh).astype(jnp.float32)
+    mu = yh.mean(axis=-1, keepdims=True)
+    var = yh.var(axis=-1, keepdims=True)
+    yh = (yh - mu) * jax.lax.rsqrt(var + 1e-5)
+    out = yh.reshape(B, S, D) * p["ln_x"]["scale"] + p["ln_x"]["bias"]
+    return out.astype(y.dtype)
+
+
+def wkv_chunked(r, k, v, logw, u, state, chunk: int):
+    """Chunked WKV6: r,k,v,logw (B,S,H,dh); u (H,dh); state (B,H,dh,dh).
+
+    Returns (y (B,S,H,dh), state').  logw = log of per-step decay < 0
+    (clamped to [-MAX_DECAY, 0) by the caller).
+
+    Intra-chunk coefficients exp(lw_ex[t] − lw[s]) are factored per
+    sub-block pair (b, a) around a boundary Ba inside/next to sub-block
+    a, so every materialized exponent is bounded by SUB·MAX_DECAY —
+    stable even under maximal decays (GLA-style secondary chunking).
+    """
+    B, S, H, dh = r.shape
+    C = min(chunk, max(S, SUB))
+    C = max((C // SUB) * SUB, SUB)
+    pad = (-S) % C
+    if pad:
+        # zero r/k with zero log-decay is an exact no-op for both the
+        # outputs we keep and the carried state
+        zeros = ((0, 0), (0, pad), (0, 0), (0, 0))
+        r = jnp.pad(r, zeros)
+        k = jnp.pad(k, zeros)
+        v = jnp.pad(v, zeros)
+        logw = jnp.pad(logw, zeros)
+    S_run = S + pad
+    nc = S_run // C
+    nu = C // SUB
+    f32 = jnp.float32
+
+    rs = r.reshape(B, nc, C, H, dh).swapaxes(0, 1)
+    ks_ = k.reshape(B, nc, C, H, dh).swapaxes(0, 1)
+    vs = v.reshape(B, nc, C, H, dh).swapaxes(0, 1)
+    ws = logw.reshape(B, nc, C, H, dh).swapaxes(0, 1).astype(f32)
+    strict = (jnp.arange(SUB)[:, None] > jnp.arange(SUB)[None, :])
+
+    @functools.partial(jax.checkpoint, prevent_cse=False)
+    def body(S_carry, blk):
+        # checkpointed: backward recomputes intra-chunk A tiles instead
+        # of saving them (matches the kernel's recompute strategy)
+        rc, kc, vc, wc = blk                          # (B, C, H, dh)
+        rcf, kcf, vcf = (t.astype(f32) for t in (rc, kc, vc))
+        lw = jnp.cumsum(wc, axis=1)                   # inclusive
+        lw_ex = lw - wc                               # exclusive
+
+        # inter-chunk: bounded (lw_ex <= 0)
+        y = jnp.einsum("bthd,bhde->bthe", rcf * jnp.exp(lw_ex), S_carry)
+
+        # intra-chunk: sub-block pairs with per-pair boundary
+        diag = jnp.einsum("bthd,bthd->bth", rcf * u.astype(f32), kcf)
+        y = y + diag[..., None] * vcf
+        for b in range(nu):
+            t0 = b * SUB
+            rb = rcf[:, t0:t0 + SUB]
+            lweb = lw_ex[:, t0:t0 + SUB]
+            for a in range(b + 1):
+                s0 = a * SUB
+                ka = kcf[:, s0:s0 + SUB]
+                va = vcf[:, s0:s0 + SUB]
+                lwa = lw[:, s0:s0 + SUB]
+                if a == b:
+                    base = lw_ex[:, t0][:, None]      # start-exclusive
+                else:
+                    base = lw[:, s0 + SUB - 1][:, None]  # end of block a
+                left = rb * jnp.exp(lweb - base)      # exponent <= 0
+                right = ka * jnp.exp(base - lwa)      # 0 <= exp <= U·clamp
+                A = jnp.einsum("bthd,bshd->bhts", left, right)
+                if a == b:
+                    A = jnp.where(strict[None, None], A, 0.0)
+                y = y.at[:, t0:t0 + SUB].add(
+                    jnp.einsum("bhts,bshd->bthd", A, va))
+
+        # state update: bounded (lw_last - lw <= 0, lw_last <= 0)
+        lw_last = lw[:, -1]                           # (B, H, dh)
+        decay_rest = jnp.exp(lw_last[:, None] - lw)   # (B, C, H, dh)
+        S_new = (jnp.exp(lw_last)[..., None] * S_carry
+                 + jnp.einsum("bshd,bshe->bhde", kcf * decay_rest, vcf))
+        return S_new, y
+
+    state, ys = jax.lax.scan(body, state.astype(f32), (rs, ks_, vs, ws))
+    y = ys.swapaxes(0, 1).reshape(B, S_run, H, dh)[:, :S]
+    return y.astype(r.dtype), state
+
+
+def wkv_step(r, k, v, logw, u, state):
+    """One decode step: r,k,v,logw (B,H,dh); state (B,H,dh,dh)."""
+    f32 = jnp.float32
+    rf, kf, vf = r.astype(f32), k.astype(f32), v.astype(f32)
+    att = state + u.astype(f32)[None, :, :, None] * (kf[..., None]
+                                                     * vf[..., None, :])
+    y = jnp.einsum("bhd,bhde->bhe", rf, att)
+    state = (jnp.exp(logw.astype(f32))[..., None] * state
+             + kf[..., None] * vf[..., None, :])
+    return y.astype(r.dtype), state
+
+
+def time_mix(p: Params, cfg, x, shift_prev, state, decode: bool = False):
+    """x: (B, S, D). Returns (out, new_shift, new_state)."""
+    B, S, D = x.shape
+    dh = cfg.rwkv_head_dim
+    H = D // dh
+    dt = x.dtype
+    xprev = _token_shift(x, shift_prev)
+    xr, xk, xv, xw, xg = _ddlerp(p, x, xprev)
+    r = (xr @ p["wr"].astype(dt)).reshape(B, S, H, dh)
+    k = (xk @ p["wk"].astype(dt)).reshape(B, S, H, dh)
+    v = (xv @ p["wv"].astype(dt)).reshape(B, S, H, dh)
+    g = jax.nn.silu(xg @ p["wg"].astype(dt))
+    logw = -jnp.exp(p["w0"].astype(jnp.float32)
+                    + (jnp.tanh(xw @ p["wA"].astype(dt))
+                       @ p["wB"].astype(dt)).astype(jnp.float32))
+    logw = jnp.clip(logw, -MAX_DECAY, -1e-4)  # see MAX_DECAY note
+    logw = logw.reshape(B, S, H, dh)
+    if decode:
+        y, state = wkv_step(r[:, 0], k[:, 0], v[:, 0], logw[:, 0],
+                            p["u"], state)
+        y = y[:, None]
+    else:
+        if cfg.use_pallas:
+            from repro.kernels.rwkv6 import ops as rops
+            y, state = rops.wkv6(r, k, v, logw, p["u"], state,
+                                 chunk=cfg.rwkv_chunk)
+        else:
+            y, state = wkv_chunked(r, k, v, logw, p["u"], state,
+                                   chunk=cfg.rwkv_chunk)
+    y = _group_norm(p, y.reshape(B, S, D), H) * g
+    return y @ p["wo"].astype(dt), x[:, -1:], state
+
+
+def channel_mix(p: Params, x, shift_prev):
+    dt = x.dtype
+    xprev = _token_shift(x, shift_prev)
+    xx = xprev - x
+    xr = x + xx * p["mu_rc"].astype(dt)
+    xk = x + xx * p["mu_kc"].astype(dt)
+    rr = jax.nn.sigmoid(xr @ p["wr_c"].astype(dt))
+    kk = jnp.square(jax.nn.relu(xk @ p["wk_c"].astype(dt)))
+    return rr * (kk @ p["wv_c"].astype(dt)), x[:, -1:]
+
+
+def rwkv6_state_spec(cfg, batch: int):
+    """Decode state: wkv state + 2 token-shift carries per layer."""
+    d = cfg.d_model
+    dh = cfg.rwkv_head_dim
+    H = d // dh
+    return {
+        "wkv": jax.ShapeDtypeStruct((batch, H, dh, dh), jnp.float32),
+        "shift_tm": jax.ShapeDtypeStruct((batch, 1, d), jnp.dtype(cfg.dtype)),
+        "shift_cm": jax.ShapeDtypeStruct((batch, 1, d), jnp.dtype(cfg.dtype)),
+    }

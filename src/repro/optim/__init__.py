@@ -1,0 +1,2 @@
+from .adamw import AdamWState, adamw_init, adamw_update  # noqa: F401
+from .schedules import warmup_cosine  # noqa: F401

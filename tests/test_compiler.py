@@ -1,0 +1,165 @@
+"""Compiler rewrites: semantics preservation (property-based) + specific
+fusion/ordering rules (paper §3.2)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import LineageRuntime, ReuseCache, input_tensor, ops
+from repro.core.compiler import compile_plan
+from repro.core.dag import LTensor
+
+
+def _ops_of(plan):
+    return plan.count_ops()
+
+
+class TestFusionRewrites:
+    def test_tsmm_detected(self, rng):
+        x = input_tensor("X", rng.normal(size=(30, 5)))
+        plan = compile_plan([x.T @ x])
+        assert _ops_of(plan).get("gram", 0) == 1
+        assert _ops_of(plan).get("matmul", 0) == 0
+
+    def test_xtv_detected(self, rng):
+        x = input_tensor("X", rng.normal(size=(30, 5)))
+        y = input_tensor("y", rng.normal(size=(30, 1)))
+        plan = compile_plan([x.T @ y])
+        assert _ops_of(plan).get("xtv", 0) == 1
+
+    def test_double_transpose_eliminated(self, rng):
+        x = input_tensor("X", rng.normal(size=(6, 4)))
+        plan = compile_plan([x.T.T + 0.0])
+        assert _ops_of(plan).get("t", 0) == 0
+
+    def test_cse_merges(self, rng):
+        x = input_tensor("X", rng.normal(size=(20, 4)))
+        a = ops.gram(x)
+        b = ops.gram(x)
+        plan = compile_plan([a + b])
+        assert _ops_of(plan).get("gram", 0) == 1
+
+
+class TestMatmulChain:
+    def test_chain_reordered_for_cost(self, rng):
+        # (A@B)@v where A (50x50), B (50x50), v (50x1):
+        # optimal order is A@(B@v) — two MVs instead of a MM
+        a = input_tensor("A", rng.normal(size=(50, 50)))
+        b = input_tensor("B", rng.normal(size=(50, 50)))
+        v = input_tensor("v", rng.normal(size=(50, 1)))
+        plan = compile_plan([(a @ b) @ v])
+        shapes = [ins.node.shape for ins in plan.instructions
+                  if ins.node.op == "matmul"]
+        assert (50, 50) not in shapes  # no full MM materialized
+
+    def test_chain_semantics(self, rng):
+        an = rng.normal(size=(20, 30))
+        bn = rng.normal(size=(30, 10))
+        cn = rng.normal(size=(10, 40))
+        a, b, c = (input_tensor(n, v) for n, v in
+                   zip("abc", (an, bn, cn)))
+        rt = LineageRuntime()
+        out = rt.evaluate([(a @ b) @ c])[0]
+        np.testing.assert_allclose(out, an @ bn @ cn, rtol=1e-6)
+
+    def test_shared_intermediate_not_split(self, rng):
+        a = input_tensor("A", rng.normal(size=(20, 20)))
+        b = input_tensor("B", rng.normal(size=(20, 20)))
+        ab = a @ b
+        # ab used twice -> reordering must not duplicate it
+        plan = compile_plan([ab @ ab])
+        assert _ops_of(plan).get("matmul", 0) == 2
+
+
+# property tests: random expressions evaluate identically with and
+# without the optimizer
+
+@st.composite
+def expr_strategy(draw):
+    """Build a random DSL expression over two fixed inputs."""
+    depth = draw(st.integers(1, 4))
+    seed = draw(st.integers(0, 2 ** 16))
+    unaries = draw(st.lists(
+        st.sampled_from(["exp", "abs", "sqrtabs", "neg", "t"]),
+        min_size=0, max_size=depth))
+    binaries = draw(st.lists(
+        st.sampled_from(["add", "mul", "sub", "matmul_tx", "div"]),
+        min_size=1, max_size=depth))
+    return seed, unaries, binaries
+
+
+def _build(x, unaries, binaries):
+    cur = x
+    for u in unaries:
+        if u == "exp":
+            cur = ops.exp(cur * 0.01)
+        elif u == "abs":
+            cur = ops.abs_(cur)
+        elif u == "sqrtabs":
+            cur = ops.sqrt(ops.abs_(cur) + 1.0)
+        elif u == "neg":
+            cur = -cur
+        elif u == "t":
+            cur = cur.T.T  # keep shape
+    for b in binaries:
+        if b == "add":
+            cur = cur + cur
+        elif b == "mul":
+            cur = cur * cur
+        elif b == "sub":
+            cur = cur - 0.5 * cur
+        elif b == "div":
+            cur = cur / (ops.abs_(cur) + 1.0)
+        elif b == "matmul_tx":
+            cur = (cur.T @ cur) * 1e-2  # gram-able pattern
+            cur = ops.sqrt(ops.abs_(cur) + 1.0)
+    return ops.sum_(cur)
+
+
+@settings(max_examples=25, deadline=None)
+@given(expr_strategy())
+def test_rewrites_preserve_semantics(params):
+    seed, unaries, binaries = params
+    rng = np.random.default_rng(seed)
+    xn = rng.normal(size=(12, 12))
+    x = input_tensor("X", xn)
+    expr = _build(x, unaries, binaries)
+    rt_opt = LineageRuntime(cache=ReuseCache(), opt_level=2)
+    rt_raw = LineageRuntime(cache=None, opt_level=0)
+    v_opt = rt_opt.evaluate([expr])[0]
+    v_raw = rt_raw.evaluate([expr])[0]
+    np.testing.assert_allclose(v_opt, v_raw, rtol=1e-5, atol=1e-7)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 6), st.integers(0, 1000))
+def test_fold_decomposition_matches_monolithic(k, seed):
+    rng = np.random.default_rng(seed)
+    folds = [input_tensor(f"pf{seed}_{i}", rng.normal(size=(16, 5)))
+             for i in range(k)]
+    stacked = np.concatenate(
+        [rng2 for rng2 in
+         [__import__("repro.core.dag", fromlist=["LEAVES"]).LEAVES.values[
+             f.node.uid] for f in folds]])
+    g = ops.gram(ops.rbind(*folds))
+    with_reuse = LineageRuntime(cache=ReuseCache()).evaluate([g])[0]
+    without = LineageRuntime(cache=None).evaluate([g])[0]
+    np.testing.assert_allclose(with_reuse, without, rtol=1e-6)
+    np.testing.assert_allclose(with_reuse, stacked.T @ stacked, rtol=1e-6)
+
+
+def test_memory_estimate_targets(rng):
+    # big op flagged distributed, small stays local
+    x = input_tensor("X", rng.normal(size=(64, 64)))
+    plan = compile_plan([ops.gram(x)], local_budget=1 << 10)
+    targets = {ins.node.op: ins.target for ins in plan.instructions}
+    assert targets["gram"] == "distributed"
+    plan2 = compile_plan([ops.gram(x)])
+    targets2 = {ins.node.op: ins.target for ins in plan2.instructions}
+    assert targets2["gram"] == "local"
+
+
+def test_explain_output(rng):
+    x = input_tensor("X", rng.normal(size=(30, 5)))
+    plan = compile_plan([x.T @ x])
+    txt = plan.explain()
+    assert "gram" in txt and "outputs:" in txt

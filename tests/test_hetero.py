@@ -1,0 +1,118 @@
+"""Heterogeneous tensors, schema detection, transformencode (paper §3.3/§4.2)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.hetero import (DataTensor, block_shape, detect_value_type,
+                               reblock, transformapply, transformencode)
+
+
+class TestSchemaDetection:
+    def test_types(self):
+        assert detect_value_type(np.array(["1", "2", "3"], object)) == "i32"
+        assert detect_value_type(np.array(["1.5", "2"], object)) == "f64"
+        assert detect_value_type(np.array(["true", "false"], object)) == "bool"
+        assert detect_value_type(np.array(["a", "b"], object)) == "str"
+        assert detect_value_type(
+            np.array([str(2**40)], object)) == "i64"
+
+    def test_from_frame(self):
+        frame = np.array([["1", "2.5", "x", "true"],
+                          ["2", "3.5", "y", "false"]], dtype=object)
+        dt = DataTensor.from_frame(frame)
+        assert dt.types == ["i32", "f64", "str", "bool"]
+        assert dt.shape == (2, 4)
+
+
+class TestDataTensor:
+    def _dt(self):
+        return DataTensor.from_dict({
+            "age": [25, 30, 45, 22],
+            "income": [50.0, 60.5, 80.0, 45.0],
+            "city": np.array(["a", "b", "a", "c"], dtype=object),
+        }, types={"city": "str"})
+
+    def test_schema(self):
+        dt = self._dt()
+        assert dt.schema == [("age", "i64"), ("income", "f64"),
+                             ("city", "str")]
+
+    def test_select_rows(self):
+        dt = self._dt().select_rows(np.array([0, 2]))
+        assert dt.nrows == 2
+        assert dt.column("age").tolist() == [25, 45]
+
+    def test_numeric_matrix(self):
+        m = self._dt().numeric_matrix()
+        assert m.shape == (4, 2)
+
+
+class TestTransformEncode:
+    def test_recode_dummycode_scale(self):
+        dt = DataTensor.from_dict({
+            "cat": np.array(["a", "b", "a", "c"], dtype=object),
+            "num": [1.0, 2.0, 3.0, 4.0],
+        }, types={"cat": "str"})
+        x, meta = transformencode(dt, {"cat": "dummycode", "num": "scale"})
+        assert x.shape == (4, 4)  # 3 dummy cols + 1 scaled
+        np.testing.assert_allclose(x[:, :3].sum(axis=1), 1.0)
+        np.testing.assert_allclose(x[:, 3].mean(), 0.0, atol=1e-12)
+
+    def test_apply_matches_encode(self):
+        dt = DataTensor.from_dict({
+            "cat": np.array(["a", "b", "a"], dtype=object),
+            "num": [1.0, 2.0, 3.0]}, types={"cat": "str"})
+        x, meta = transformencode(dt, {"cat": "recode", "num": "scale"})
+        x2 = transformapply(dt, meta)
+        np.testing.assert_array_equal(x, x2)
+
+    def test_binning(self):
+        dt = DataTensor.from_dict({"v": np.arange(100.0)})
+        x, meta = transformencode(dt, {"v": "bin:4"})
+        assert set(np.unique(x)) <= {0.0, 1.0, 2.0, 3.0}
+
+    def test_unseen_category_apply(self):
+        dt = DataTensor.from_dict({"c": np.array(["a", "b"], object)},
+                                  types={"c": "str"})
+        _, meta = transformencode(dt, {"c": "dummycode"})
+        dt2 = DataTensor.from_dict({"c": np.array(["z"], object)},
+                                   types={"c": "str"})
+        x2 = transformapply(dt2, meta)
+        assert x2.sum() == 0.0  # unseen -> all-zero row
+
+
+class TestBlocking:
+    def test_block_shapes_scheme(self):
+        # the paper's exponentially decreasing edge lengths
+        assert block_shape(2) == (1024, 1024)
+        assert block_shape(3) == (128, 128, 128)
+        assert block_shape(4) == (32,) * 4
+        assert block_shape(7) == (8,) * 7
+
+    def test_reblock_conversion_example(self):
+        """1024^2 matrix block -> 64 sub-blocks of 128^2 (paper §3.3)."""
+        arr = np.arange(1024 * 1024, dtype=np.float32).reshape(1024, 1024)
+        blocks = reblock(arr, target_rank=3)
+        assert len(blocks) == 64
+        assert blocks[(0, 0)].shape == (128, 128)
+        # reassembly is lossless
+        out = np.zeros_like(arr)
+        for (bi, bj), blk in blocks.items():
+            out[bi * 128:(bi + 1) * 128, bj * 128:(bj + 1) * 128] = blk
+        np.testing.assert_array_equal(out, arr)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 50), st.integers(0, 10 ** 6))
+def test_roundtrip_property(nrows, seed):
+    rng = np.random.default_rng(seed)
+    dt = DataTensor.from_dict({
+        "a": rng.integers(0, 5, nrows),
+        "b": rng.normal(size=nrows),
+        "c": np.array([f"s{v}" for v in rng.integers(0, 3, nrows)], object),
+    }, types={"c": "str"})
+    x, meta = transformencode(dt, {"a": "passthrough", "b": "scale",
+                                   "c": "recode"})
+    x2 = transformapply(dt, meta)
+    np.testing.assert_array_equal(x, x2)
+    assert x.shape[0] == nrows

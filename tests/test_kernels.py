@@ -1,0 +1,191 @@
+"""Per-kernel correctness: Pallas (interpret=True) vs pure-jnp oracle,
+swept over shapes and dtypes."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import ops as fops
+from repro.kernels.flash_attention import ref as fref
+from repro.kernels.gram import ops as gops
+from repro.kernels.gram import ref as gref
+from repro.kernels.rwkv6 import ops as rops
+from repro.kernels.rwkv6 import ref as rref
+from repro.kernels.ssd import ops as sops
+from repro.kernels.ssd import ref as sref
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-4, atol=2e-4)
+
+
+class TestGramKernel:
+    @pytest.mark.parametrize("m,n,bm,bn", [
+        (128, 32, 64, 32), (256, 96, 128, 32), (512, 128, 128, 64),
+        (192, 64, 64, 64),  # m not multiple of bm -> padding path
+        (250, 70, 64, 32),  # ragged both dims
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_gram_allclose(self, rng, m, n, bm, bn, dtype):
+        x = jnp.asarray(rng.normal(size=(m, n)), dtype)
+        got = gops.gram(x, interpret=True, bm=bm, bn=bn)
+        want = gref.gram(x)
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32),
+                                   **_tol(dtype))
+
+    def test_gram_symmetric(self, rng):
+        x = jnp.asarray(rng.normal(size=(256, 64)), jnp.float32)
+        g = np.asarray(gops.gram(x, interpret=True, bm=128, bn=32))
+        np.testing.assert_allclose(g, g.T, rtol=1e-6)
+
+    @pytest.mark.parametrize("cols", [1, 3])
+    def test_xtv_allclose(self, rng, cols):
+        x = jnp.asarray(rng.normal(size=(256, 96)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(256, cols)), jnp.float32)
+        got = gops.xtv(x, v, interpret=True, bm=128, bn=32)
+        want = gref.xtv(x, v)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_gram_aug_fused_stats(self, rng):
+        """gram([X|y]) carries X^TX, X^Ty, y^Ty in one pass."""
+        x = jnp.asarray(rng.normal(size=(128, 30)), jnp.float32)
+        y = jnp.asarray(rng.normal(size=(128, 1)), jnp.float32)
+        g = np.asarray(gops.gram_aug(x, y, interpret=True, bm=64, bn=32))
+        np.testing.assert_allclose(g[:30, :30], np.asarray(x).T @ x,
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(g[:30, 30:], np.asarray(x).T @ y,
+                                   rtol=1e-4, atol=1e-4)
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("S,Hq,Hkv,hd,bq,bk", [
+        (128, 4, 4, 32, 64, 64),     # MHA
+        (256, 8, 2, 64, 64, 64),     # GQA 4:1
+        (256, 4, 1, 64, 128, 64),    # MQA
+        (192, 2, 2, 32, 64, 64),     # ragged seq vs block
+    ])
+    @pytest.mark.parametrize("causal", [True, False])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_allclose(self, rng, S, Hq, Hkv, hd, bq, bk, causal, dtype):
+        if S % bq or S % bk:
+            pytest.skip("kernel requires block-aligned seq (wrapper pads "
+                        "in ops for production shapes)")
+        B = 2
+        q = jnp.asarray(rng.normal(size=(B, S, Hq, hd)), dtype)
+        k = jnp.asarray(rng.normal(size=(B, S, Hkv, hd)), dtype)
+        v = jnp.asarray(rng.normal(size=(B, S, Hkv, hd)), dtype)
+        got = fops.flash_attention(q, k, v, causal=causal, interpret=True,
+                                   bq=bq, bk=bk)
+        want = fref.attention(q, k, v, causal=causal)
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32),
+                                   **_tol(dtype))
+
+    def test_matches_chunked_model_path(self, rng):
+        from repro.models.attention import chunked_attention
+        B, S, H, hd = 2, 256, 4, 32
+        q = jnp.asarray(rng.normal(size=(B, S, H, hd)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(B, S, H, hd)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(B, S, H, hd)), jnp.float32)
+        a = chunked_attention(q, k, v, causal=True, q_chunk=64, k_chunk=64)
+        b = fref.attention(q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-5)
+
+
+class TestRwkv6Kernel:
+    @pytest.mark.parametrize("S,H,dh,chunk", [
+        (64, 2, 32, 32), (128, 3, 32, 64), (256, 2, 64, 64),
+    ])
+    def test_allclose(self, rng, S, H, dh, chunk):
+        B = 2
+        r = jnp.asarray(rng.normal(size=(B, S, H, dh)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(B, S, H, dh)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(B, S, H, dh)), jnp.float32)
+        lw = jnp.clip(-jnp.exp(jnp.asarray(
+            rng.normal(size=(B, S, H, dh)) * 1.5, jnp.float32)), -5.0, -1e-4)
+        u = jnp.asarray(rng.normal(size=(H, dh)) * 0.1, jnp.float32)
+        s0 = jnp.asarray(rng.normal(size=(B, H, dh, dh)) * 0.1, jnp.float32)
+        y_ref, s_ref = rref.wkv6(r, k, v, lw, u, s0)
+        y_pl, s_pl = rops.wkv6(r, k, v, lw, u, s0, chunk=chunk,
+                               interpret=True)
+        scale = float(jnp.abs(y_ref).max()) + 1e-6
+        assert float(jnp.abs(y_pl - y_ref).max()) / scale < 1e-4
+        np.testing.assert_allclose(np.asarray(s_pl), np.asarray(s_ref),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_extreme_decay_stable(self, rng):
+        """Clamped maximal decay must not produce inf/nan."""
+        B, S, H, dh = 1, 64, 1, 32
+        r = jnp.asarray(rng.normal(size=(B, S, H, dh)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(B, S, H, dh)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(B, S, H, dh)), jnp.float32)
+        lw = jnp.full((B, S, H, dh), -5.0, jnp.float32)
+        u = jnp.zeros((H, dh), jnp.float32)
+        s0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+        y_ref, _ = rref.wkv6(r, k, v, lw, u, s0)
+        y_pl, _ = rops.wkv6(r, k, v, lw, u, s0, chunk=32, interpret=True)
+        assert np.isfinite(np.asarray(y_pl)).all()
+        np.testing.assert_allclose(np.asarray(y_pl), np.asarray(y_ref),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_decode_step_matches_scan(self, rng):
+        from repro.models.rwkv6 import wkv_step
+        B, S, H, dh = 1, 8, 2, 16
+        r, k, v = (jnp.asarray(rng.normal(size=(B, S, H, dh)), jnp.float32)
+                   for _ in range(3))
+        lw = jnp.clip(-jnp.exp(jnp.asarray(rng.normal(size=(B, S, H, dh)),
+                                           jnp.float32)), -5.0, -1e-4)
+        u = jnp.asarray(rng.normal(size=(H, dh)) * 0.1, jnp.float32)
+        s = jnp.zeros((B, H, dh, dh), jnp.float32)
+        y_ref, s_ref = rref.wkv6(r, k, v, lw, u, s)
+        ys = []
+        for t in range(S):
+            y, s = wkv_step(r[:, t], k[:, t], v[:, t], lw[:, t], u, s)
+            ys.append(y)
+        y_steps = jnp.stack(ys, axis=1)
+        np.testing.assert_allclose(np.asarray(y_steps), np.asarray(y_ref),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(s), np.asarray(s_ref),
+                                   rtol=1e-5, atol=1e-5)
+
+
+class TestSsdKernel:
+    @pytest.mark.parametrize("S,di,ds,bd,tc", [
+        (64, 64, 8, 32, 16), (128, 32, 16, 32, 64), (96, 64, 4, 64, 32),
+    ])
+    def test_allclose(self, rng, S, di, ds, bd, tc):
+        B = 2
+        x = jnp.asarray(rng.normal(size=(B, S, di)), jnp.float32)
+        dt = jnp.asarray(rng.random(size=(B, S, di)) * 0.2, jnp.float32)
+        A = -jnp.exp(jnp.asarray(rng.normal(size=(di, ds)) * 0.3,
+                                 jnp.float32))
+        Bv = jnp.asarray(rng.normal(size=(B, S, ds)), jnp.float32)
+        Cv = jnp.asarray(rng.normal(size=(B, S, ds)), jnp.float32)
+        D = jnp.ones((di,), jnp.float32)
+        h0 = jnp.zeros((B, di, ds), jnp.float32)
+        y1, h1 = sref.ssm_scan(x, dt, A, Bv, Cv, D, h0)
+        y2, h2 = sops.ssm_scan(x, dt, A, Bv, Cv, D, h0, interpret=True,
+                               bd=bd, tc=tc)
+        np.testing.assert_allclose(np.asarray(y2), np.asarray(y1),
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(h2), np.asarray(h1),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_chunked_model_path_matches_ref(self, rng):
+        from repro.models.mamba import selective_scan
+        B, S, di, ds = 2, 128, 16, 8
+        x = jnp.asarray(rng.normal(size=(B, S, di)), jnp.float32)
+        dt = jnp.asarray(rng.random(size=(B, S, di)) * 0.2, jnp.float32)
+        A = -jnp.exp(jnp.asarray(rng.normal(size=(di, ds)) * 0.3,
+                                 jnp.float32))
+        Bv = jnp.asarray(rng.normal(size=(B, S, ds)), jnp.float32)
+        Cv = jnp.asarray(rng.normal(size=(B, S, ds)), jnp.float32)
+        D = jnp.ones((di,), jnp.float32)
+        h0 = jnp.zeros((B, di, ds), jnp.float32)
+        y1, h1 = sref.ssm_scan(x, dt, A, Bv, Cv, D, h0)
+        y2, h2 = selective_scan(x, dt, A, Bv, Cv, D, h0, chunk=32)
+        np.testing.assert_allclose(np.asarray(y2), np.asarray(y1),
+                                   rtol=1e-4, atol=1e-4)

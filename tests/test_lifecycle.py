@@ -1,0 +1,179 @@
+"""Lifecycle builtins: regression, validation, cleaning, algorithms."""
+import numpy as np
+import pytest
+
+from repro.core import LineageRuntime, ReuseCache, input_tensor, ops
+from repro.lifecycle import (cross_validate_lm, grid_search_lm,
+                             impute_by_mean, impute_by_median, kmeans,
+                             l2svm, lm, lmCG, lmDS, mice_lite, mlogreg,
+                             outlier_by_iqr, outlier_by_sd, pca,
+                             scale_matrix, steplm, winsorize)
+from repro.lifecycle.validation import make_folds
+
+
+@pytest.fixture
+def reg_data(rng):
+    n, d = 400, 10
+    x = rng.normal(size=(n, d))
+    beta = rng.normal(size=(d, 1))
+    y = x @ beta + 0.01 * rng.normal(size=(n, 1))
+    return x, y, beta
+
+
+class TestRegression:
+    def test_lmds_matches_numpy(self, reg_data):
+        x, y, _ = reg_data
+        b = lmDS(input_tensor("X", x), input_tensor("y", y), reg=1e-6)
+        ref = np.linalg.solve(x.T @ x + 1e-6 * np.eye(10), x.T @ y)
+        np.testing.assert_allclose(b, ref, rtol=1e-6, atol=1e-8)
+
+    def test_lmcg_matches_lmds(self, reg_data):
+        x, y, _ = reg_data
+        X, Y = input_tensor("X", x), input_tensor("y", y)
+        np.testing.assert_allclose(lmCG(X, Y, reg=1e-3),
+                                   lmDS(X, Y, reg=1e-3),
+                                   rtol=1e-4, atol=1e-6)
+
+    def test_lm_dispatch(self, reg_data):
+        x, y, _ = reg_data
+        b = lm(input_tensor("X", x), input_tensor("y", y))
+        assert b.shape == (10, 1)
+
+    def test_intercept(self, reg_data):
+        x, y, _ = reg_data
+        b = lmDS(input_tensor("X", x), input_tensor("y", y),
+                 intercept=True)
+        assert b.shape == (11, 1)
+
+    def test_steplm_selects_informative(self, rng):
+        n = 300
+        x = rng.normal(size=(n, 8))
+        y = (3.0 * x[:, 2:3] - 2.0 * x[:, 5:6]
+             + 0.01 * rng.normal(size=(n, 1)))
+        beta, sel = steplm(input_tensor("X", x), input_tensor("y", y))
+        assert set(sel[:2]) == {2, 5}
+
+    def test_steplm_reuse_saves_work(self, rng):
+        x = rng.normal(size=(200, 6))
+        y = x @ rng.normal(size=(6, 1)) + 0.01 * rng.normal(size=(200, 1))
+        rt = LineageRuntime(cache=ReuseCache())
+        steplm(input_tensor("X", x), input_tensor("y", y),
+               max_features=3, runtime=rt)
+        assert rt.cache.stats.hits > 10
+
+
+class TestValidation:
+    def test_grid_search_all_lambdas_correct(self, reg_data):
+        x, y, _ = reg_data
+        rt = LineageRuntime(cache=ReuseCache())
+        lambdas = [0.01, 0.1, 1.0, 10.0]
+        betas, losses = grid_search_lm(input_tensor("X", x),
+                                       input_tensor("y", y), lambdas,
+                                       runtime=rt)
+        for j, lam in enumerate(lambdas):
+            ref = np.linalg.solve(x.T @ x + lam * np.eye(10), x.T @ y)
+            np.testing.assert_allclose(betas[:, j:j + 1], ref, rtol=1e-5,
+                                       atol=1e-7)
+        # X^T X and X^T y computed once, reused 3 times each
+        assert rt.cache.stats.hits >= 6
+        assert losses == sorted(losses)  # more reg -> more train loss
+
+    def test_cv_reuse_equals_no_reuse(self, reg_data):
+        x, y, _ = reg_data
+        fx, fy = make_folds(x, y, 5, seed=1)
+        b1, e1 = cross_validate_lm(fx, fy,
+                                   runtime=LineageRuntime(
+                                       cache=ReuseCache()))
+        b2, e2 = cross_validate_lm(fx, fy, runtime=LineageRuntime())
+        np.testing.assert_allclose(b1, b2, rtol=1e-5, atol=1e-7)
+        np.testing.assert_allclose(e1, e2, rtol=1e-5)
+
+    def test_cv_reuse_counts(self, reg_data):
+        x, y, _ = reg_data
+        fx, fy = make_folds(x, y, 6, seed=2)
+        rt = LineageRuntime(cache=ReuseCache())
+        cross_validate_lm(fx, fy, runtime=rt)
+        # 6 folds: each per-fold gram/xtv computed once, hit 4 more times
+        assert rt.stats.reused >= 2 * 6 * 4
+
+
+class TestCleaning:
+    def test_impute_by_mean(self, rng):
+        x = rng.normal(size=(50, 4))
+        x[5, 1] = np.nan
+        x[7, 2] = np.nan
+        out = impute_by_mean(input_tensor("X", x))
+        assert not np.isnan(out).any()
+        np.testing.assert_allclose(out[5, 1], np.nanmean(x[:, 1]),
+                                   rtol=1e-9)
+
+    def test_impute_by_median(self, rng):
+        x = rng.normal(size=(50, 3))
+        x[0, 0] = np.nan
+        out = impute_by_median(input_tensor("X", x))
+        np.testing.assert_allclose(out[0, 0], np.nanmedian(x[:, 0]))
+
+    def test_mice_beats_mean_on_correlated(self, rng):
+        n = 400
+        z = rng.normal(size=(n, 1))
+        x = np.hstack([z + 0.1 * rng.normal(size=(n, 1)) for _ in range(4)])
+        x_miss = x.copy()
+        mask = rng.random(x.shape) < 0.15
+        x_miss[mask] = np.nan
+        m_mean = impute_by_mean(input_tensor("Xm", x_miss))
+        m_mice = mice_lite(input_tensor("Xc", x_miss), n_iter=3)
+        err_mean = np.abs(m_mean - x)[mask].mean()
+        err_mice = np.abs(m_mice - x)[mask].mean()
+        assert err_mice < 0.7 * err_mean
+
+    def test_outliers(self, rng):
+        x = rng.normal(size=(200, 2))
+        x[0, 0] = 100.0
+        flagged = outlier_by_sd(input_tensor("X", x), k=4, repair="nan")
+        assert np.isnan(flagged[0, 0])
+        assert np.isnan(flagged).sum() <= 3
+        clipped = outlier_by_iqr(input_tensor("X2", x), repair="clip")
+        assert clipped[0, 0] < 100.0
+
+    def test_winsorize_and_scale(self, rng):
+        x = rng.normal(size=(300, 3))
+        w = winsorize(input_tensor("X", x), 0.05, 0.95)
+        assert w.max() <= np.quantile(x, 0.95, axis=0).max() + 1e-9
+        s = scale_matrix(input_tensor("Xs", x))
+        np.testing.assert_allclose(s.mean(axis=0), 0, atol=1e-12)
+        np.testing.assert_allclose(s.std(axis=0, ddof=1), 1, rtol=1e-6)
+
+
+class TestAlgorithms:
+    def test_pca_matches_numpy(self, rng):
+        x = rng.normal(size=(100, 6)) @ np.diag([5, 3, 1, .5, .2, .1])
+        comps, proj = pca(input_tensor("X", x), k=2)
+        xc = x - x.mean(0)
+        _, _, vt = np.linalg.svd(xc, full_matrices=False)
+        # same subspace up to sign
+        overlap = np.abs(comps.T @ vt[:2].T)
+        np.testing.assert_allclose(np.diag(overlap), 1.0, atol=1e-6)
+
+    def test_kmeans_separates_clusters(self, rng):
+        a = rng.normal(size=(100, 2)) + [10, 10]
+        b = rng.normal(size=(100, 2)) - [10, 10]
+        x = np.vstack([a, b])
+        centers, assign = kmeans(input_tensor("X", x), k=2, seed=1)
+        assert len(set(assign[:100])) == 1
+        assert assign[0] != assign[150]
+
+    def test_l2svm_separable(self, rng):
+        x = rng.normal(size=(200, 5))
+        w_true = rng.normal(size=(5, 1))
+        y = np.sign(x @ w_true)
+        w = l2svm(input_tensor("X", x), input_tensor("y", y), max_iter=50)
+        assert (np.sign(x @ w) == y).mean() > 0.97
+
+    def test_mlogreg_learns(self, rng):
+        x = rng.normal(size=(300, 4))
+        labels = (x[:, 0] > 0).astype(int)
+        yoh = np.zeros((300, 2))
+        yoh[np.arange(300), labels] = 1
+        W = mlogreg(input_tensor("X", x), input_tensor("y", yoh),
+                    max_iter=150)
+        assert ((x @ W).argmax(1) == labels).mean() > 0.95

@@ -1,0 +1,168 @@
+"""Lineage tracing + reuse cache behaviour (paper §4.1)."""
+import numpy as np
+import pytest
+
+from repro.core import (LineageRuntime, PreparedScript, ReuseCache,
+                        evaluate, input_tensor, lineage_trace, ops)
+from repro.core.compiler import compile_plan
+
+
+def _data(rng, n=200, d=10):
+    x = rng.normal(size=(n, d))
+    y = rng.normal(size=(n, 1))
+    return x, y
+
+
+class TestLineageHash:
+    def test_same_computation_same_hash(self, rng):
+        xn, _ = _data(rng)
+        x = input_tensor("X", xn)
+        a = ops.gram(x)
+        b = ops.gram(x)
+        lin = {}
+        from repro.core.dag import LEAVES
+        assert a.node.lhash(LEAVES.lineage) == b.node.lhash(LEAVES.lineage)
+
+    def test_different_data_different_hash(self, rng):
+        from repro.core.dag import LEAVES
+        x1 = input_tensor("X", rng.normal(size=(10, 4)))
+        x2 = input_tensor("X", rng.normal(size=(10, 4)))
+        assert ops.gram(x1).node.lhash(LEAVES.lineage) != \
+            ops.gram(x2).node.lhash(LEAVES.lineage)
+
+    def test_literals_distinguish(self, rng):
+        from repro.core.dag import LEAVES
+        x = input_tensor("X", rng.normal(size=(10, 4)))
+        a = ops.gram(x) + 0.1 * ops.eye(4)
+        b = ops.gram(x) + 0.2 * ops.eye(4)
+        assert a.node.lhash(LEAVES.lineage) != b.node.lhash(LEAVES.lineage)
+
+    def test_shape_in_hash(self):
+        from repro.core.dag import LEAVES
+        assert ops.eye(3).node.lhash(LEAVES.lineage) != \
+            ops.eye(5).node.lhash(LEAVES.lineage)
+
+    def test_seed_traced(self):
+        from repro.core.dag import LEAVES
+        a = ops.rand((5, 5), seed=1)
+        b = ops.rand((5, 5), seed=2)
+        c = ops.rand((5, 5), seed=1)
+        assert a.node.lhash(LEAVES.lineage) != b.node.lhash(LEAVES.lineage)
+        assert a.node.lhash(LEAVES.lineage) == c.node.lhash(LEAVES.lineage)
+
+
+class TestFullReuse:
+    def test_gram_reused_across_lambdas(self, rng):
+        xn, yn = _data(rng)
+        x, y = input_tensor("X", xn), input_tensor("y", yn)
+        rt = LineageRuntime(cache=ReuseCache())
+        for lam in (0.1, 1.0, 10.0):
+            beta = ops.solve(ops.gram(x) + lam * ops.eye(10), ops.xtv(x, y))
+            out = rt.evaluate([beta])[0]
+            ref = np.linalg.solve(xn.T @ xn + lam * np.eye(10), xn.T @ yn)
+            np.testing.assert_allclose(out, ref, rtol=1e-6, atol=1e-8)
+        # gram + xtv hit twice each (2nd and 3rd lambda)
+        assert rt.cache.stats.hits >= 4
+        assert rt.stats.reused >= 4
+
+    def test_reuse_returns_identical_values(self, rng):
+        xn, _ = _data(rng)
+        x = input_tensor("X", xn)
+        rt = LineageRuntime(cache=ReuseCache())
+        g1 = rt.evaluate([ops.gram(x)])[0]
+        g2 = rt.evaluate([ops.gram(x)])[0]
+        np.testing.assert_array_equal(g1, g2)
+
+    def test_no_cache_no_reuse(self, rng):
+        xn, _ = _data(rng)
+        x = input_tensor("X", xn)
+        rt = LineageRuntime(cache=None)
+        rt.evaluate([ops.gram(x)])
+        rt.evaluate([ops.gram(x)])
+        assert rt.stats.reused == 0
+
+
+class TestPartialReuse:
+    def test_cv_fold_decomposition(self, rng):
+        """gram(rbind(folds)) decomposes; per-fold grams reused."""
+        folds = [input_tensor(f"f{i}", rng.normal(size=(40, 6)))
+                 for i in range(5)]
+        rt = LineageRuntime(cache=ReuseCache())
+        # two different leave-one-out subsets share 3 folds
+        g1 = rt.evaluate([ops.gram(ops.rbind(*folds[:4]))])[0]
+        before = rt.cache.stats.hits
+        g2 = rt.evaluate([ops.gram(ops.rbind(*folds[1:]))])[0]
+        assert rt.cache.stats.hits - before >= 3  # folds 1,2,3 reused
+        from repro.core.dag import LEAVES
+        stack = np.concatenate([LEAVES.values[f.node.uid]
+                                for f in folds[1:]])
+        np.testing.assert_allclose(g2, stack.T @ stack, rtol=1e-6)
+
+    def test_steplm_cbind_decomposition(self, rng):
+        """gram(cbind(X, c)) reuses gram(X)."""
+        xn = rng.normal(size=(100, 8))
+        cn = rng.normal(size=(100, 1))
+        x, c = input_tensor("X", xn), input_tensor("c", cn)
+        rt = LineageRuntime(cache=ReuseCache())
+        rt.evaluate([ops.gram(x)])
+        before = rt.cache.stats.hits
+        g = rt.evaluate([ops.gram(ops.cbind(x, c))])[0]
+        assert rt.cache.stats.hits > before
+        full = np.concatenate([xn, cn], axis=1)
+        np.testing.assert_allclose(g, full.T @ full, rtol=1e-6, atol=1e-7)
+
+
+class TestEviction:
+    def test_budget_respected(self, rng):
+        cache = ReuseCache(budget_bytes=1 << 16)
+        rt = LineageRuntime(cache=cache)
+        for i in range(20):
+            x = input_tensor(f"X{i}", rng.normal(size=(64, 64)))
+            rt.evaluate([ops.gram(x)])
+        assert cache.stats.bytes_cached <= 1 << 16
+        assert cache.stats.evictions > 0
+
+    def test_lru_policy(self, rng):
+        cache = ReuseCache(budget_bytes=1 << 16, policy="lru")
+        rt = LineageRuntime(cache=cache)
+        for i in range(20):
+            x = input_tensor(f"Y{i}", rng.normal(size=(64, 64)))
+            rt.evaluate([ops.gram(x)])
+        assert cache.stats.bytes_cached <= 1 << 16
+
+
+class TestPreparedScript:
+    def test_recompile_free_reexecution(self, rng):
+        ps = PreparedScript(
+            lambda a, b: ops.solve(ops.gram(a) + 0.1 * ops.eye(6),
+                                   ops.xtv(a, b)),
+            [(50, 6), (50, 1)])
+        for seed in range(3):
+            r = np.random.default_rng(seed)
+            xn, yn = r.normal(size=(50, 6)), r.normal(size=(50, 1))
+            out = ps(xn, yn)[0]
+            ref = np.linalg.solve(xn.T @ xn + 0.1 * np.eye(6), xn.T @ yn)
+            np.testing.assert_allclose(out, ref, rtol=1e-6, atol=1e-8)
+
+    def test_lineage_distinguishes_inputs(self, rng):
+        rt = LineageRuntime(cache=ReuseCache())
+        ps = PreparedScript(lambda a: ops.gram(a), [(32, 4)], runtime=rt)
+        x1 = rng.normal(size=(32, 4))
+        x2 = rng.normal(size=(32, 4))
+        g1 = ps(x1)[0]
+        g2 = ps(x2)[0]  # must NOT hit x1's cache entry
+        np.testing.assert_allclose(g2, x2.T @ x2, rtol=1e-6)
+        g1b = ps(x1)[0]  # this SHOULD hit
+        np.testing.assert_array_equal(g1, g1b)
+        assert rt.cache.stats.hits >= 1
+
+
+def test_lineage_trace_format(rng):
+    x = input_tensor("X", rng.normal(size=(10, 3)))
+    beta = ops.solve(ops.gram(x) + 0.1 * ops.eye(3),
+                     ops.xtv(x, input_tensor("y", rng.normal(size=(10, 1)))))
+    trace = lineage_trace(beta)
+    assert "L·input X:" in trace
+    assert "L·gram" in trace and "L·solve" in trace
+    # deduplicated: each node appears once
+    assert trace.count("L·gram") == 1

@@ -1,0 +1,75 @@
+"""Fault-tolerant supervision: run_with_restarts resume + preemption,
+and hlocost windowed-operand byte capping."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.restart import (Preemption, TrainState,
+                                      run_with_restarts)
+
+
+def _make_fns(log):
+    def init_fn():
+        return TrainState(step=0, params={"w": jnp.zeros((4,))},
+                          opt_state={"m": jnp.zeros((4,))},
+                          pipeline_state={"seed": 0, "step": 0})
+
+    def step_fn(state):
+        log.append(state.step)
+        w = state.params["w"] + 1.0
+        return TrainState(step=state.step + 1, params={"w": w},
+                          opt_state=state.opt_state,
+                          pipeline_state={"seed": 0, "step": state.step + 1})
+
+    return init_fn, step_fn
+
+
+class TestRunWithRestarts:
+    def test_runs_to_completion(self, tmp_path):
+        log = []
+        init_fn, step_fn = _make_fns(log)
+        final = run_with_restarts(ckpt_dir=str(tmp_path), init_fn=init_fn,
+                                  step_fn=step_fn, total_steps=7,
+                                  ckpt_every=3)
+        assert final.step == 7
+        assert float(final.params["w"][0]) == 7.0
+
+    def test_injected_failure_then_resume(self, tmp_path):
+        log = []
+        init_fn, step_fn = _make_fns(log)
+        with pytest.raises(Preemption):
+            run_with_restarts(ckpt_dir=str(tmp_path), init_fn=init_fn,
+                              step_fn=step_fn, total_steps=10,
+                              ckpt_every=2, fail_at=5)
+        # restart: resumes from the last checkpoint (step 4), same result
+        final = run_with_restarts(ckpt_dir=str(tmp_path), init_fn=init_fn,
+                                  step_fn=step_fn, total_steps=10,
+                                  ckpt_every=2)
+        assert final.step == 10
+        assert float(final.params["w"][0]) == 10.0  # bit-exact trajectory
+        # resumed at 4, not 0 (the checkpoint was used)
+        assert 4 in log and log.count(0) == 1
+
+
+class TestHlocostWindowedCap:
+    def test_scan_accumulator_not_charged_per_step(self):
+        """A scan writing per-step ys must NOT charge the whole stacked
+        output array every iteration (in-place dynamic-update-slice)."""
+        from repro.launch.hlocost import analyze
+
+        def f(x):
+            def body(c, _):
+                c = jnp.tanh(c)
+                return c, c            # ys: (64, 256, 256) stacked
+            _, ys = jax.lax.scan(body, x, None, length=64)
+            return ys
+
+        x = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+        t = analyze(jax.jit(f).lower(x).compile().as_text())
+        full_ys = 64 * 256 * 256 * 4
+        # naive accounting would charge >= 64 × full_ys ≈ 1.07e9;
+        # windowed accounting stays within a few × the real traffic
+        assert t.bytes < 8 * full_ys, t.bytes
