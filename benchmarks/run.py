@@ -8,6 +8,10 @@ Prints ``name,us_per_call,derived`` CSV lines.
   ex2_fed_*             — §4.3 Example 2: federated MV/VM/gram + lmDS
   gram_*                — §5.2 kernel trio (dense XLA / BLAS / sparse)
   roofline_*            — §Roofline cells from the dry-run sweep
+  fused_vs_interpreted  — ISSUE 1: segment JIT engine vs per-op interpreter
+                          (appends a BENCH_fusion.json trajectory entry)
+
+``--smoke`` runs only the fusion benchmark at a reduced size (CI).
 """
 import sys
 
@@ -15,8 +19,14 @@ sys.path.insert(0, "src")
 
 
 def main() -> None:
-    from benchmarks import (cv_reuse, federated_bench, hpo_baseline,
-                            hpo_reuse, kernel_bench, roofline_bench)
+    if "--smoke" in sys.argv:
+        from benchmarks import fusion_bench
+        print("name,us_per_call,derived")
+        fusion_bench.main(rows=500, cols=32, calls=20, repeats=2)
+        return
+    from benchmarks import (cv_reuse, federated_bench, fusion_bench,
+                            hpo_baseline, hpo_reuse, kernel_bench,
+                            roofline_bench)
     quick = "--quick" in sys.argv
     ks = (1, 5, 10) if quick else (1, 5, 10, 20)
     print("name,us_per_call,derived")
@@ -26,6 +36,7 @@ def main() -> None:
     federated_bench.main()
     kernel_bench.main()
     roofline_bench.main()
+    fusion_bench.main(calls=20 if quick else 50)
 
 
 if __name__ == "__main__":

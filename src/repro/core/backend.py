@@ -1,7 +1,17 @@
 """Runtime operation library (the TensorBlock operation layer, §3.2/§3.3).
 
-Executes single HOP instructions over concrete arrays. Two physical
-representations are supported, mirroring SystemDS's dense/sparse blocks:
+Every HOP is implemented as a *kernel builder*: `attrs -> fn(*inputs)`,
+registered in `_KERNEL_BUILDERS`. The returned kernels are pure and
+jax-traceable, so the same registry serves two execution modes:
+
+  * standalone   — `execute_op` builds and calls one kernel eagerly
+                   (the per-instruction interpreter / `fuse=False` path)
+  * fused        — `repro.core.segments.build_segment_fn` chains kernels
+                   into one closure per segment and hands it to
+                   `jax.jit` (the segment engine)
+
+Two physical representations are supported, mirroring SystemDS's
+dense/sparse blocks:
 
   * dense  — jnp arrays (fp64 default on the lifecycle path, like SystemDS)
   * sparse — jax.experimental.sparse.BCOO for 2D matrices below a density
@@ -14,7 +24,7 @@ Pallas TPU kernel on TPU and the jnp path elsewhere.
 """
 from __future__ import annotations
 
-from functools import partial
+from functools import lru_cache, partial
 from typing import Any
 
 import jax
@@ -130,73 +140,208 @@ _AGG = {
 }
 
 
-def execute_op(op: str, attrs: dict[str, Any], inputs: list) -> Any:
-    """Execute one instruction; inputs are jnp arrays (or BCOO)."""
-    if op in _BINARY:
-        a, b = (densify(x) for x in inputs)
-        return _BINARY[op](a, b)
-    if op in _UNARY:
-        return _UNARY[op](densify(inputs[0]))
-    if op in _AGG:
-        x = densify(inputs[0])
-        return _AGG[op](x)
-    if op == "matmul":
-        return _matmul(inputs[0], inputs[1])
-    if op == "gram":
-        return _gram(inputs[0])
-    if op == "xtv":
-        return _xtv(inputs[0], inputs[1])
-    if op == "t":
-        x = inputs[0]
-        return x.T if is_sparse(x) else jnp.transpose(densify(x))
-    if op == "solve":
-        return _solve(inputs[0], inputs[1])
-    if op == "cholesky":
-        return jnp.linalg.cholesky(densify(inputs[0]).astype(jnp.float64))
-    if op == "inv":
-        return jnp.linalg.inv(densify(inputs[0]).astype(jnp.float64))
-    if op == "diag":
-        return jnp.diagonal(densify(inputs[0]))[:, None]
-    if op == "diagm":
-        return jnp.diag(densify(inputs[0])[:, 0])
-    if op == "slice":
-        return _slice(inputs[0], attrs["index"])
-    if op == "reshape":
-        return jnp.reshape(densify(inputs[0]), attrs["newshape"])
-    if op in ("rbind", "cbind"):
-        return jnp.concatenate([densify(x) for x in inputs],
-                               axis=attrs["axis"])
-    if op == "where":
-        c, a, b = (densify(x) for x in inputs)
-        return jnp.where(c != 0, a, b)
-    if op == "replace_nan":
-        return jnp.nan_to_num(densify(inputs[0]), nan=attrs["value"])
-    if op == "cumsum":
-        return jnp.cumsum(densify(inputs[0]), axis=0)
-    if op == "literal":
-        return jnp.asarray(attrs["value"])
-    if op == "full":
-        return jnp.full(attrs.get("_shape", ()), attrs["value"])
-    if op == "eye":
-        return jnp.eye(attrs["_shape"][0])
-    if op == "seq":
-        n = attrs["_shape"][0]
-        return (attrs["start"]
-                + attrs["step"] * jnp.arange(n, dtype=jnp.float64))[:, None]
-    if op == "rand":
-        key = jax.random.PRNGKey(attrs["seed"])
-        shape = attrs["_shape"]
-        if attrs.get("dist") == "normal":
+# ---------------------------------------------------------------------------
+# Kernel registry: op name -> (attrs -> pure fn(*inputs))
+# ---------------------------------------------------------------------------
+
+KernelFn = Any  # Callable[..., array]
+
+_KERNEL_BUILDERS: dict[str, Any] = {}
+
+# Ops that must never be traced into a fused jit segment (data-dependent
+# python control flow, host side effects, dynamic output shapes). All
+# current kernels are traceable; the segmenter breaks segments here so
+# future ops can opt out of fusion by name.
+NON_TRACEABLE_OPS: frozenset[str] = frozenset()
+
+
+def register_kernel(op: str):
+    """Register `builder(attrs) -> fn(*inputs)` for an op."""
+    def deco(builder):
+        _KERNEL_BUILDERS[op] = builder
+        return builder
+    return deco
+
+
+def has_kernel(op: str) -> bool:
+    return op in _KERNEL_BUILDERS
+
+
+def get_kernel(op: str, attrs: dict[str, Any]) -> KernelFn:
+    """Build the pure kernel for one instruction.
+
+    `attrs` is the node's attribute dict plus `_shape` (output shape) for
+    generator ops. The returned fn is closed over static attrs only, so
+    it is safe to call standalone or inside a `jax.jit` trace.
+    """
+    builder = _KERNEL_BUILDERS.get(op)
+    if builder is None:
+        raise NotImplementedError(f"op {op!r}")
+    return builder(attrs)
+
+
+def _register_table(table: dict[str, Any], arity: int) -> None:
+    def make_builder(fn):
+        if arity == 1:
+            def build(attrs):
+                return lambda x: fn(densify(x))
+        else:
+            def build(attrs):
+                return lambda a, b: fn(densify(a), densify(b))
+        return build
+    for op, fn in table.items():
+        _KERNEL_BUILDERS[op] = make_builder(fn)
+
+
+_register_table(_BINARY, 2)
+_register_table(_UNARY, 1)
+_register_table(_AGG, 1)
+
+
+@register_kernel("matmul")
+def _build_matmul(attrs):
+    return _matmul
+
+
+@register_kernel("gram")
+def _build_gram(attrs):
+    return _gram
+
+
+@register_kernel("xtv")
+def _build_xtv(attrs):
+    return _xtv
+
+
+@register_kernel("t")
+def _build_t(attrs):
+    return lambda x: x.T if is_sparse(x) else jnp.transpose(densify(x))
+
+
+@register_kernel("solve")
+def _build_solve(attrs):
+    return _solve
+
+
+@register_kernel("cholesky")
+def _build_cholesky(attrs):
+    return lambda x: jnp.linalg.cholesky(densify(x).astype(jnp.float64))
+
+
+@register_kernel("inv")
+def _build_inv(attrs):
+    return lambda x: jnp.linalg.inv(densify(x).astype(jnp.float64))
+
+
+@register_kernel("diag")
+def _build_diag(attrs):
+    return lambda x: jnp.diagonal(densify(x))[:, None]
+
+
+@register_kernel("diagm")
+def _build_diagm(attrs):
+    return lambda x: jnp.diag(densify(x)[:, 0])
+
+
+@register_kernel("slice")
+def _build_slice(attrs):
+    index = attrs["index"]
+    return lambda x: _slice(x, index)
+
+
+@register_kernel("reshape")
+def _build_reshape(attrs):
+    newshape = attrs["newshape"]
+    return lambda x: jnp.reshape(densify(x), newshape)
+
+
+def _build_concat(attrs):
+    axis = attrs["axis"]
+    return lambda *xs: jnp.concatenate([densify(x) for x in xs], axis=axis)
+
+
+_KERNEL_BUILDERS["rbind"] = _build_concat
+_KERNEL_BUILDERS["cbind"] = _build_concat
+
+
+@register_kernel("where")
+def _build_where(attrs):
+    return lambda c, a, b: jnp.where(densify(c) != 0, densify(a), densify(b))
+
+
+@register_kernel("replace_nan")
+def _build_replace_nan(attrs):
+    value = attrs["value"]
+    return lambda x: jnp.nan_to_num(densify(x), nan=value)
+
+
+@register_kernel("cumsum")
+def _build_cumsum(attrs):
+    return lambda x: jnp.cumsum(densify(x), axis=0)
+
+
+@register_kernel("literal")
+def _build_literal(attrs):
+    value = attrs["value"]
+    return lambda: jnp.asarray(value)
+
+
+@register_kernel("full")
+def _build_full(attrs):
+    shape, value = attrs.get("_shape", ()), attrs["value"]
+    return lambda: jnp.full(shape, value)
+
+
+@register_kernel("eye")
+def _build_eye(attrs):
+    n = attrs["_shape"][0]
+    return lambda: jnp.eye(n)
+
+
+@register_kernel("seq")
+def _build_seq(attrs):
+    n = attrs["_shape"][0]
+    start, step = attrs["start"], attrs["step"]
+    return lambda: (start + step * jnp.arange(n, dtype=jnp.float64))[:, None]
+
+
+@register_kernel("rand")
+def _build_rand(attrs):
+    shape, seed = attrs["_shape"], attrs["seed"]
+    dist = attrs.get("dist")
+    sp = attrs.get("sparsity_gen", 1.0)
+
+    def run():
+        key = jax.random.PRNGKey(seed)
+        if dist == "normal":
             out = jax.random.normal(key, shape, dtype=jnp.float64)
         else:
             out = jax.random.uniform(key, shape, dtype=jnp.float64)
-        sp = attrs.get("sparsity_gen", 1.0)
         if sp < 1.0:
-            key2 = jax.random.PRNGKey(attrs["seed"] + 0x9E3779B9)
+            key2 = jax.random.PRNGKey(seed + 0x9E3779B9)
             mask = jax.random.uniform(key2, shape) < sp
             out = jnp.where(mask, out, 0.0)
         return out
-    raise NotImplementedError(f"op {op!r}")
+    return run
+
+
+@lru_cache(maxsize=4096)
+def _kernel_cached(op: str, attrs: tuple, shape: tuple) -> KernelFn:
+    d = dict(attrs)
+    d["_shape"] = shape
+    return get_kernel(op, d)
+
+
+def kernel_for_node(node) -> KernelFn:
+    """Memoized kernel lookup for a HOP node — kernels depend only on
+    (op, attrs, shape), so repeated plan executions (the interpreter
+    loop, segment lowering) reuse one closure instead of rebuilding."""
+    return _kernel_cached(node.op, node.attrs, node.shape)
+
+
+def execute_op(op: str, attrs: dict[str, Any], inputs: list) -> Any:
+    """Execute one instruction eagerly; inputs are jnp arrays (or BCOO)."""
+    return get_kernel(op, attrs)(*inputs)
 
 
 def to_numpy(x) -> np.ndarray:

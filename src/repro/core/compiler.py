@@ -36,6 +36,9 @@ class Plan:
     output_ids: list[int]
     roots: list[Node]
     est_bytes_peak: int = 0
+    reuse_enabled: bool = False
+    # segmentation memo: {reuse_active: [Segment, ...]}
+    _segments: dict = field(default_factory=dict, repr=False)
 
     def count_ops(self) -> dict[str, int]:
         out: dict[str, int] = {}
@@ -43,16 +46,52 @@ class Plan:
             out[ins.node.op] = out.get(ins.node.op, 0) + 1
         return out
 
-    def explain(self) -> str:
-        """EXPLAIN-style plan dump (SystemDS -explain)."""
-        lines = []
-        for ins in self.instructions:
-            args = ",".join(f"%{i}" for i in ins.input_ids)
-            attrs = {k: v for k, v in ins.node.attrs if k != "index"}
-            lines.append(
-                f"%{ins.out_id} = [{ins.target[0].upper()}] "
+    def segments_for(self, reuse_active: bool):
+        """Fusable segments of this plan (lazily computed, memoized).
+
+        With an active reuse cache every cacheable intermediate must stay
+        observable, so segmentation degenerates to per-instruction; see
+        `repro.core.segments`.
+        """
+        reuse_active = bool(reuse_active)
+        got = self._segments.get(reuse_active)
+        if got is None:
+            from .segments import segment_plan
+            got = segment_plan(self, reuse_active=reuse_active)
+            self._segments[reuse_active] = got
+        return got
+
+    def _ins_line(self, ins: Instruction) -> str:
+        args = ",".join(f"%{i}" for i in ins.input_ids)
+        attrs = {k: v for k, v in ins.node.attrs if k != "index"}
+        return (f"%{ins.out_id} = [{ins.target[0].upper()}] "
                 f"{ins.node.op}({args}) {ins.node.shape} "
                 f"sp={ins.node.sparsity:.3f} {attrs if attrs else ''}")
+
+    def explain(self, segments: bool = True,
+                reuse_active: Optional[bool] = None) -> str:
+        """EXPLAIN-style plan dump (SystemDS -explain) with segment
+        annotations showing how instructions fuse into jit executables.
+
+        `reuse_active` defaults to the flag the plan was compiled with;
+        pass the executing runtime's actual cache state (cache is not
+        None) to see the segmentation that run will use.
+        """
+        if reuse_active is None:
+            reuse_active = self.reuse_enabled
+        lines = []
+        if segments and self.instructions:
+            for seg in self.segments_for(reuse_active):
+                outs = ",".join(f"%{u}" for u in seg.output_uids)
+                kind = "fused" if len(seg.instructions) > 1 else "single"
+                lines.append(
+                    f"-- segment {seg.index} [{seg.target}] {kind} "
+                    f"{len(seg.instructions)} op(s) key={seg.key[:10]} "
+                    f"-> {outs}")
+                lines.extend(f"  {self._ins_line(ins)}"
+                             for ins in seg.instructions)
+        else:
+            lines.extend(self._ins_line(ins) for ins in self.instructions)
         lines.append("outputs: " + ", ".join(f"%{i}" for i in self.output_ids))
         return "\n".join(lines)
 
@@ -96,6 +135,7 @@ def compile_plan(outputs: list[LTensor], *, reuse_enabled: bool = False,
     instructions: list[Instruction] = []
     peak = 0
     live = 0
+    live_sizes: dict[int, int] = {}  # uid -> bytes counted into `live`
     for idx, n in enumerate(order):
         if n.op == "input":
             continue
@@ -106,11 +146,14 @@ def compile_plan(outputs: list[LTensor], *, reuse_enabled: bool = False,
             input_ids=tuple(i.uid for i in n.inputs),
             target=target,
             last_use_of=tuple(frees_at.get(idx, ()))))
-        live += n.est_bytes()
+        sz = n.est_bytes()
+        live_sizes[n.uid] = sz
+        live += sz
         peak = max(peak, live)
-        for uid in frees_at.get(idx, ()):  # estimate only
-            live = max(0, live - 1)  # sizes not tracked per-uid here
+        for uid in frees_at.get(idx, ()):
+            # frees of input leaves were never counted into `live`
+            live -= live_sizes.pop(uid, 0)
 
     return Plan(instructions=instructions,
                 output_ids=[r.uid for r in roots], roots=roots,
-                est_bytes_peak=peak)
+                est_bytes_peak=peak, reuse_enabled=reuse_enabled)

@@ -73,8 +73,6 @@ class Node:
         return dense
 
     # -- lineage hash ------------------------------------------------------
-    _lhash_cache: dict = field(default_factory=dict, compare=False, repr=False)
-
     def lhash(self, leaf_lineage: dict[int, str]) -> str:
         """Lineage hash given leaf lineage ids (uid -> stable id).
 
@@ -82,15 +80,13 @@ class Node:
         *value*, i.e. two structurally identical computations over inputs
         with identical lineage collide (enabling reuse), while different
         input data or literals produce different hashes.
+
+        Uncached by design: a per-node memo keyed on id(environment) can
+        alias a dead environment after GC and return a stale hash, and a
+        content key costs O(env) to build per call. Batch callers (the
+        runtime) share one memo across a whole plan via `_lhash_rec`.
         """
-        key = id(leaf_lineage)
-        cached = self._lhash_cache.get(key)
-        if cached is not None:
-            return cached
-        h = _lhash_rec(self, leaf_lineage, {})
-        self._lhash_cache.clear()  # only keep latest environment
-        self._lhash_cache[key] = h
-        return h
+        return _lhash_rec(self, leaf_lineage, {})
 
     def __repr__(self) -> str:  # concise
         return f"Node#{self.uid}:{self.op}{self.shape}"

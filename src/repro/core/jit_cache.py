@@ -1,0 +1,116 @@
+"""Process-wide cache of compiled segment executables.
+
+Keyed by (segment canonical structural key, concrete input signature
+(shapes + dtypes)), so structurally identical segments compiled from
+*different* plans — HPO loops, CV folds, repeated `PreparedScript`
+construction — share one XLA executable and replay without re-tracing.
+
+On a miss the segment closure is lowered ahead-of-time
+(`jax.jit(fn).lower(*args).compile()`) so trace+compile cost is measured
+explicitly and replay calls skip dispatch-time signature checks; if AOT
+lowering is unavailable for some input combination we fall back to the
+plain `jax.jit` wrapper (which still caches by aval internally).
+"""
+from __future__ import annotations
+
+import time
+import warnings
+from collections import OrderedDict
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import jax
+
+
+@dataclass
+class JitCacheStats:
+    hits: int = 0
+    misses: int = 0
+    trace_time: float = 0.0   # cumulative lower+compile seconds
+    aot_fallbacks: int = 0    # segments served by plain jit (AOT failed)
+
+    def as_dict(self) -> dict:
+        return dict(hits=self.hits, misses=self.misses,
+                    trace_time_s=round(self.trace_time, 6),
+                    aot_fallbacks=self.aot_fallbacks)
+
+
+def arg_signature(args) -> tuple:
+    """Shape/dtype(/weak-type) signature of concrete call arguments.
+
+    weak_type matters: AOT-compiled executables reject aval mismatches,
+    and a weak-typed jax scalar (e.g. a literal crossing a segment
+    boundary) has a different aval than a strong-typed array of the same
+    shape/dtype.
+    """
+    return tuple(
+        (tuple(getattr(a, "shape", ())),
+         str(getattr(a, "dtype", type(a).__name__)),
+         bool(getattr(a, "weak_type", False)))
+        for a in args)
+
+
+class JitProgramCache:
+    """LRU cache: (segment key, input signature) -> compiled executable."""
+
+    def __init__(self, capacity: int = 512):
+        self.capacity = int(capacity)
+        self._entries: "OrderedDict[tuple, Callable]" = OrderedDict()
+        self.stats = JitCacheStats()
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def lookup(self, seg_key: str, args) -> tuple[tuple, Optional[Callable]]:
+        """Return (full key, executable-or-None); counts hit/miss."""
+        key = (seg_key, arg_signature(args))
+        exe = self._entries.get(key)
+        if exe is not None:
+            self._entries.move_to_end(key)
+            self.stats.hits += 1
+            return key, exe
+        self.stats.misses += 1
+        return key, None
+
+    def compile(self, key: tuple, fn: Callable, args
+                ) -> tuple[Callable, float]:
+        """Compile `fn` for `args`, store under `key`; returns
+        (executable, trace_seconds)."""
+        t0 = time.perf_counter()
+        jitted = jax.jit(fn)
+        if hasattr(jitted, "lower"):
+            # Genuine trace/compile errors propagate immediately — masking
+            # them here would cache a broken wrapper that re-raises on
+            # every subsequent run with a misleading 'fallback' stat.
+            exe: Any = jitted.lower(*args).compile()
+        else:  # pragma: no cover - AOT API unavailable on this jax
+            warnings.warn("jax.jit(...).lower unavailable; segment will "
+                          "use dispatch-path jit", RuntimeWarning,
+                          stacklevel=2)
+            self.stats.aot_fallbacks += 1
+            exe = jitted
+        dt = time.perf_counter() - t0
+        self.stats.trace_time += dt
+        self._entries[key] = exe
+        if len(self._entries) > self.capacity:
+            self._entries.popitem(last=False)
+        return exe, dt
+
+    def clear(self) -> None:
+        self._entries.clear()
+
+
+_global_cache: Optional[JitProgramCache] = None
+
+
+def get_jit_cache() -> JitProgramCache:
+    global _global_cache
+    if _global_cache is None:
+        _global_cache = JitProgramCache()
+    return _global_cache
+
+
+def clear_jit_cache() -> None:
+    """Drop all compiled executables (tests / memory pressure)."""
+    if _global_cache is not None:
+        _global_cache.clear()

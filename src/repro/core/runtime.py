@@ -20,7 +20,8 @@ import numpy as np
 
 from . import backend
 from .compiler import Plan, compile_plan
-from .dag import LEAVES, LTensor, Node, input_tensor
+from .dag import LEAVES, LTensor, Node, _lhash_rec, input_tensor
+from .jit_cache import get_jit_cache
 from .reuse import ReuseCache
 
 
@@ -30,25 +31,38 @@ class RuntimeStats:
     executed: int = 0      # instructions actually computed (not reused)
     reused: int = 0
     exec_time: float = 0.0
+    segments: int = 0        # segments dispatched on the fused path
+    jit_cache_hits: int = 0  # warm compiled-executable lookups
+    trace_time: float = 0.0  # seconds spent tracing+compiling segments
 
     def as_dict(self):
         return dict(instructions=self.instructions, executed=self.executed,
-                    reused=self.reused, exec_time_s=round(self.exec_time, 6))
+                    reused=self.reused, exec_time_s=round(self.exec_time, 6),
+                    segments=self.segments,
+                    jit_cache_hits=self.jit_cache_hits,
+                    trace_time_s=round(self.trace_time, 6))
 
 
 class LineageRuntime:
     """Executes plans with lineage tracing and optional reuse."""
 
     def __init__(self, cache: Optional[ReuseCache] = None,
-                 opt_level: int = 2, sparse_inputs: bool = False):
+                 opt_level: int = 2, sparse_inputs: bool = False,
+                 fuse: bool = True):
         # sparse_inputs: BCOO physical representation for low-density
         # leaves. Default OFF: measured on this backend (XLA-CPU),
         # BCOO gram at density 0.1 is ~4x SLOWER than dense — SystemDS's
         # hand-tuned CSR kernels have no XLA analogue (DESIGN.md §2a,
         # EXPERIMENTS.md §Baseline). The path stays for API fidelity.
+        #
+        # fuse: execute plans as jit-compiled segments (see
+        # repro.core.segments). BCOO values are not traced through the
+        # fused path, so sparse_inputs forces the per-instruction
+        # interpreter.
         self.cache = cache
         self.opt_level = opt_level
         self.sparse_inputs = sparse_inputs
+        self.fuse = fuse
         self.stats = RuntimeStats()
 
     # ------------------------------------------------------------------
@@ -62,12 +76,29 @@ class LineageRuntime:
     def run_plan(self, plan: Plan,
                  leaf_values: Optional[dict[int, Any]] = None,
                  leaf_lineage: Optional[dict[int, str]] = None) -> list[np.ndarray]:
-        values: dict[int, Any] = {}
-        lin = dict(LEAVES.lineage)
-        if leaf_lineage:
-            lin.update(leaf_lineage)
+        values, lin = self._bind_leaves(plan, leaf_values, leaf_lineage)
+        if self.fuse and not self.sparse_inputs and self.cache is None:
+            self._run_segments(plan, values)
+        else:
+            # Reuse-active execution IS the boundary interpreter: with a
+            # cache, segmentation degenerates to one instruction per
+            # segment (see segments.py), and the per-instruction loop
+            # probes/populates the cache at exactly those boundaries with
+            # cost measurements identical across fuse modes.
+            self._run_instructions(plan, values, lin)
+        return [backend.to_numpy(values[i]) for i in plan.output_ids]
 
-        # bind leaves
+    # ------------------------------------------------------------------
+    def _bind_leaves(self, plan: Plan,
+                     leaf_values: Optional[dict[int, Any]],
+                     leaf_lineage: Optional[dict[int, str]]
+                     ) -> tuple[dict[int, Any], dict[int, str]]:
+        values: dict[int, Any] = {}
+        lin: dict[int, str] = {}
+        if self.cache is not None:  # lineage only drives reuse probing
+            lin = dict(LEAVES.lineage)
+            if leaf_lineage:
+                lin.update(leaf_lineage)
         for ins in plan.instructions:
             for inp in ins.node.inputs:
                 if inp.op == "input" and inp.uid not in values:
@@ -87,13 +118,20 @@ class LineageRuntime:
         for r in plan.roots:  # outputs that are themselves leaves
             if r.op == "input" and r.uid not in values:
                 values[r.uid] = (leaf_values or LEAVES.values)[r.uid]
+        return values, lin
 
-        # execute
+    # ------------------------------------------------------------------
+    def _run_instructions(self, plan: Plan, values: dict[int, Any],
+                          lin: dict[int, str]) -> None:
+        """Per-instruction interpreter (the `fuse=False` fallback and the
+        BCOO path); probes/populates the reuse cache at every op."""
+        lmemo: dict[int, str] = {}  # lineage-hash memo shared across the run
         for ins in plan.instructions:
             self.stats.instructions += 1
             node = ins.node
-            lhash = node.lhash(lin)
+            lhash = None
             if self.cache is not None:
+                lhash = _lhash_rec(node, lin, lmemo)
                 hit = self.cache.probe(lhash)
                 if hit is not None:
                     values[ins.out_id] = hit
@@ -101,10 +139,8 @@ class LineageRuntime:
                     self._free(values, ins.last_use_of, plan)
                     continue
             ins_inputs = [values[i] for i in ins.input_ids]
-            attrs = dict(node.attrs)
-            attrs["_shape"] = node.shape
             t0 = time.perf_counter()
-            out = backend.execute_op(node.op, attrs, ins_inputs)
+            out = backend.kernel_for_node(node)(*ins_inputs)
             if hasattr(out, "block_until_ready"):
                 out.block_until_ready()
             dt = time.perf_counter() - t0
@@ -115,7 +151,35 @@ class LineageRuntime:
                 self.cache.put(lhash, out, dt)
             self._free(values, ins.last_use_of, plan)
 
-        return [backend.to_numpy(values[i]) for i in plan.output_ids]
+    # ------------------------------------------------------------------
+    def _run_segments(self, plan: Plan, values: dict[int, Any]) -> None:
+        """Segment executor (the fused, cache-less path): maximal fusable
+        runs replayed through cached jit executables."""
+        segments = plan.segments_for(False)
+        jcache = get_jit_cache()
+        for seg in segments:
+            self.stats.segments += 1
+            self.stats.instructions += len(seg.instructions)
+            args = [values[u] for u in seg.input_uids]
+            key, exe = jcache.lookup(seg.key, args)
+            if exe is None:
+                from .segments import build_segment_fn
+                exe, dt_trace = jcache.compile(
+                    key, build_segment_fn(seg), args)
+                self.stats.trace_time += dt_trace
+            else:
+                self.stats.jit_cache_hits += 1
+            t0 = time.perf_counter()
+            outs = exe(*args)
+            for o in outs:
+                if hasattr(o, "block_until_ready"):
+                    o.block_until_ready()
+            dt = time.perf_counter() - t0
+            self.stats.executed += len(seg.instructions)
+            self.stats.exec_time += dt
+            for uid, val in zip(seg.output_uids, outs, strict=True):
+                values[uid] = val
+            self._free(values, seg.frees, plan)
 
     @staticmethod
     def _free(values: dict[int, Any], uids: tuple[int, ...], plan: Plan):
@@ -180,12 +244,17 @@ class PreparedScript:
         assert len(arrays) == len(self._leaves)
         leaf_values: dict[int, Any] = {}
         leaf_lineage: dict[int, str] = {}
+        # content fingerprints keep reuse sound across re-binds, but they
+        # cost a hash pass per input — only lineage consumers (a reuse
+        # cache) need them
+        need_lineage = self.runtime.cache is not None
         from .dag import _fingerprint
         for leaf, arr in zip(self._leaves, arrays):
             arr = np.asarray(arr)
             leaf_values[leaf.node.uid] = arr
-            leaf_lineage[leaf.node.uid] = \
-                f"{leaf.node.attr('name')}:{_fingerprint(arr)}"
+            if need_lineage:
+                leaf_lineage[leaf.node.uid] = \
+                    f"{leaf.node.attr('name')}:{_fingerprint(arr)}"
         return self.runtime.run_plan(self.plan, leaf_values, leaf_lineage)
 
 

@@ -1,0 +1,180 @@
+"""Segmentation pass: instruction stream -> maximal fusable segments.
+
+The devito-DLE-style lowering stage of the compiler (SystemDS codegen
+analogue): the topologically ordered instruction list produced by
+`compile_plan` is partitioned into *segments*, each of which lowers to
+one pure Python closure over the `repro.core.backend` kernel registry
+and is compiled once by `jax.jit` (see `repro.core.jit_cache`), so XLA
+fuses the whole segment and replay skips per-op dispatch entirely.
+
+Segment boundaries are forced by:
+
+  * reuse-probe points — with an active `ReuseCache` every cacheable
+    intermediate must remain observable so lineage reuse stays sound;
+    since cacheability depends on measured cost, segmentation degenerates
+    to one instruction per segment (each probe point is a boundary)
+  * execution-target changes — heavy `local` and `distributed`
+    instructions never share a segment (scalar generators are
+    target-neutral and join either side)
+  * non-traceable ops — anything in `backend.NON_TRACEABLE_OPS` runs in
+    its own segment, outside any jit trace
+
+Each segment carries a *canonical structural key*: `dag.structural_key`
+computed with segment inputs pre-seeded positionally, so two segments
+that perform the same computation hash identically even when their node
+uids differ. `PreparedScript` re-invocations and HPO/CV loops therefore
+hit warm compiled executables in the global jit cache instead of
+re-tracing.
+"""
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass
+from typing import TYPE_CHECKING, Optional
+
+from . import backend
+from .dag import Node, structural_key
+
+if TYPE_CHECKING:  # avoid circular import; Plan imports this lazily
+    from .compiler import Instruction, Plan
+
+
+@dataclass
+class Segment:
+    """A maximal fusable run of instructions."""
+
+    index: int
+    instructions: list
+    input_uids: tuple[int, ...]   # external values read (leaves or earlier
+                                  # segment outputs), first-use order
+    output_uids: tuple[int, ...]  # values that must be observable outside
+                                  # (plan outputs + cross-segment uses)
+    output_nodes: tuple[Node, ...]
+    frees: tuple[int, ...]        # uids dead after this segment
+    target: str                   # 'local' | 'distributed'
+    key: str                      # canonical structural hash
+
+    @property
+    def fused(self) -> bool:
+        return len(self.instructions) > 1
+
+
+def _target_neutral(ins) -> bool:
+    """Scalar generators (literals, folded constants) cost nothing on any
+    target; letting them join either side keeps heavy runs contiguous."""
+    return not ins.input_ids and ins.node.shape == ()
+
+
+def _segment_key(instructions, input_uids, output_positions,
+                 target: str) -> str:
+    """Uid-independent structural hash of the segment's computation.
+
+    External inputs are seeded into the `structural_key` memo by
+    position, truncating recursion at the segment boundary; interior
+    nodes (including generators/literals) hash by op/attrs/shape/dtype.
+    `output_positions` (indices of exported instructions) must be part
+    of the key: two segments with identical bodies but different output
+    sets compile to different executables. Input shapes/dtypes are
+    deliberately excluded — the jit cache adds the concrete argument
+    signature at lookup time.
+    """
+    memo = {uid: f"@in{i}" for i, uid in enumerate(input_uids)}
+    body = ";".join(structural_key(ins.node, memo) for ins in instructions)
+    outs = ",".join(str(p) for p in output_positions)
+    return hashlib.sha1(
+        f"seg1|{target}|{body}|outs={outs}".encode()).hexdigest()
+
+
+def segment_plan(plan: "Plan", reuse_active: bool) -> list[Segment]:
+    """Partition `plan.instructions` into segments (pure, static)."""
+    groups: list[list] = []
+    group_targets: list[str] = []
+    cur_target: Optional[str] = None  # None while the group is all-neutral
+    for ins in plan.instructions:
+        neutral = _target_neutral(ins)
+        start_new = (
+            not groups
+            or reuse_active  # every intermediate is a reuse-probe point
+            or groups[-1][-1].node.op in backend.NON_TRACEABLE_OPS
+            or ins.node.op in backend.NON_TRACEABLE_OPS
+            or (not neutral and cur_target is not None
+                and ins.target != cur_target))
+        if start_new:
+            groups.append([ins])
+            group_targets.append(ins.target)
+            cur_target = None if neutral else ins.target
+        else:
+            groups[-1].append(ins)
+            if not neutral and cur_target is None:
+                cur_target = ins.target
+                group_targets[-1] = ins.target
+
+    consumer_segs: dict[int, set[int]] = {}
+    for si, group in enumerate(groups):
+        for ins in group:
+            for uid in ins.input_ids:
+                consumer_segs.setdefault(uid, set()).add(si)
+
+    out_ids = set(plan.output_ids)
+    segments: list[Segment] = []
+    for si, group in enumerate(groups):
+        in_group = {ins.out_id for ins in group}
+        input_uids: list[int] = []
+        seen_in: set[int] = set()
+        for ins in group:
+            for uid in ins.input_ids:
+                if uid not in in_group and uid not in seen_in:
+                    seen_in.add(uid)
+                    input_uids.append(uid)
+        consumed_elsewhere = {uid for uid, segs in consumer_segs.items()
+                              if segs - {si}}
+        output_uids, output_nodes, output_positions = [], [], []
+        for pos, ins in enumerate(group):
+            if ins.out_id in out_ids or ins.out_id in consumed_elsewhere:
+                output_uids.append(ins.out_id)
+                output_nodes.append(ins.node)
+                output_positions.append(pos)
+        frees: list[int] = []
+        seen_f: set[int] = set()
+        for ins in group:
+            for uid in ins.last_use_of:
+                # purely segment-internal values never materialize in the
+                # runtime environment, so freeing them is a no-op; only
+                # report frees of externally visible values
+                if uid in in_group and uid not in output_uids:
+                    continue
+                if uid not in seen_f:
+                    seen_f.add(uid)
+                    frees.append(uid)
+        segments.append(Segment(
+            index=si, instructions=list(group),
+            input_uids=tuple(input_uids),
+            output_uids=tuple(output_uids),
+            output_nodes=tuple(output_nodes),
+            frees=tuple(frees),
+            target=group_targets[si],
+            key=_segment_key(group, input_uids, output_positions,
+                             group_targets[si])))
+    return segments
+
+
+def build_segment_fn(seg: Segment):
+    """Lower a segment to one pure closure over the kernel registry.
+
+    The result takes the segment's external inputs positionally (order of
+    `seg.input_uids`) and returns the tuple of `seg.output_uids` values.
+    It is jit-traceable whenever every kernel in the segment is.
+    """
+    steps = [(ins.out_id, ins.input_ids, backend.kernel_for_node(ins.node))
+             for ins in seg.instructions]
+    in_pos = {uid: i for i, uid in enumerate(seg.input_uids)}
+    out_uids = seg.output_uids
+
+    def run(*args):
+        env: dict[int, object] = {}
+        for out_id, input_ids, kern in steps:
+            env[out_id] = kern(*[env[u] if u in env else args[in_pos[u]]
+                                 for u in input_ids])
+        return tuple(env[u] for u in out_uids)
+
+    return run

@@ -1,0 +1,87 @@
+"""Compatibility shim for `hypothesis`.
+
+When hypothesis is installed, re-export the real `given`/`settings`/`st`.
+When it is absent (slim CI containers), provide a tiny deterministic
+fallback that runs each property test over a fixed number of
+pseudo-randomly drawn examples from a seeded PRNG, supporting exactly
+the strategy subset this suite uses (`integers`, `sampled_from`,
+`lists`, `floats`, `composite`). Failures are reproducible because the
+draw sequence depends only on the example index.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+    import random
+
+    _DEFAULT_EXAMPLES = 15
+
+    class _Strategy:
+        __slots__ = ("_draw",)
+
+        def __init__(self, draw_fn):
+            self._draw = draw_fn
+
+        def draw(self, rnd: random.Random):
+            return self._draw(rnd)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value: int, max_value: int) -> _Strategy:
+            return _Strategy(lambda rnd: rnd.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value: float = 0.0, max_value: float = 1.0,
+                   **_kw) -> _Strategy:
+            return _Strategy(lambda rnd: rnd.uniform(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(elements) -> _Strategy:
+            elements = list(elements)
+            return _Strategy(lambda rnd: rnd.choice(elements))
+
+        @staticmethod
+        def lists(elem: _Strategy, min_size: int = 0,
+                  max_size: int = 10) -> _Strategy:
+            def draw(rnd):
+                n = rnd.randint(min_size, max_size)
+                return [elem.draw(rnd) for _ in range(n)]
+            return _Strategy(draw)
+
+        @staticmethod
+        def composite(fn):
+            def make(*args, **kwargs):
+                def draw(rnd):
+                    return fn(lambda s: s.draw(rnd), *args, **kwargs)
+                return _Strategy(draw)
+            return make
+
+    st = _Strategies()
+
+    def settings(max_examples: int = _DEFAULT_EXAMPLES, **_ignored):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*strategies):
+        def deco(fn):
+            # Zero-arg wrapper: without the hypothesis pytest plugin the
+            # drawn parameters must not look like fixtures to pytest.
+            def wrapper():
+                n = getattr(wrapper, "_max_examples", _DEFAULT_EXAMPLES)
+                for i in range(n):
+                    rnd = random.Random(0xA11CE + 7919 * i)
+                    drawn = [s.draw(rnd) for s in strategies]
+                    try:
+                        fn(*drawn)
+                    except Exception as e:
+                        raise AssertionError(
+                            f"falsifying example #{i}: {drawn!r}") from e
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+        return deco

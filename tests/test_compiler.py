@@ -2,7 +2,7 @@
 fusion/ordering rules (paper §3.2)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import LineageRuntime, ReuseCache, input_tensor, ops
 from repro.core.compiler import compile_plan

@@ -1,7 +1,7 @@
 """Federated tensors + instructions vs dense oracles (paper §4.3, Ex. 2)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.federated import (FederatedTensor, LocalSite,
                                   federated_lmds)

@@ -1,7 +1,7 @@
 """Heterogeneous tensors, schema detection, transformencode (paper §3.3/§4.2)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.hetero import (DataTensor, block_shape, detect_value_type,
                                reblock, transformapply, transformencode)
