@@ -10,23 +10,72 @@ Prints ``name,us_per_call,derived`` CSV lines.
   roofline_*            — §Roofline cells from the dry-run sweep
   fused_vs_interpreted  — ISSUE 1: segment JIT engine vs per-op interpreter
                           (appends a BENCH_fusion.json trajectory entry)
+  sparse_*              — ISSUE 3: sparsity-aware fused execution +
+                          cost-gated reuse probes (BENCH_sparse.json)
 
-``--smoke`` runs only the fusion benchmark at a reduced size (CI).
+Every run ends with a summary table aggregating the latest entry of all
+``BENCH_*.json`` trajectories.
+
+``--smoke`` runs the fusion + sparse benchmarks at reduced sizes (CI).
 """
+import glob
+import json
+import os
 import sys
 
 sys.path.insert(0, "src")
 
+BENCH_DIR = os.path.dirname(os.path.abspath(__file__))
+
+
+def aggregate() -> None:
+    """Print one summary row per BENCH_*.json (latest trajectory entry)."""
+    paths = sorted(glob.glob(os.path.join(BENCH_DIR, "BENCH_*.json")))
+    if not paths:
+        return
+    rows = []
+    for path in paths:
+        try:
+            with open(path) as f:
+                trajectory = json.load(f)
+            entry = trajectory[-1]
+        except Exception as e:
+            print(f"!! {os.path.basename(path)}: unreadable trajectory "
+                  f"({type(e).__name__}: {e})")
+            continue
+        metrics = "; ".join(
+            f"{k.replace('_us_per_call', '')}={v}us" if
+            k.endswith("_us_per_call") else f"{k}={v}"
+            for k, v in entry.items()
+            if k.endswith("_us_per_call") or k.startswith("speedup"))
+        rows.append((os.path.basename(path),
+                     str(entry.get("benchmark", "?")),
+                     str(entry.get("workload", ""))[:46],
+                     metrics))
+    if not rows:
+        return
+    headers = ("trajectory", "benchmark", "workload", "metrics")
+    widths = [max(len(headers[i]), *(len(r[i]) for r in rows))
+              for i in range(3)]
+    print("\n== benchmark summary (latest entry per trajectory) ==")
+    print("  ".join(h.ljust(w) for h, w in zip(headers[:3], widths))
+          + "  " + headers[3])
+    for r in rows:
+        print("  ".join(c.ljust(w) for c, w in zip(r[:3], widths))
+              + "  " + r[3])
+
 
 def main() -> None:
     if "--smoke" in sys.argv:
-        from benchmarks import fusion_bench
+        from benchmarks import fusion_bench, sparse_bench
         print("name,us_per_call,derived")
         fusion_bench.main(rows=500, cols=32, calls=20, repeats=2)
+        sparse_bench.main(rows=512, cols=64, calls=10, repeats=2)
+        aggregate()
         return
     from benchmarks import (cv_reuse, federated_bench, fusion_bench,
                             hpo_baseline, hpo_reuse, kernel_bench,
-                            roofline_bench)
+                            roofline_bench, sparse_bench)
     quick = "--quick" in sys.argv
     ks = (1, 5, 10) if quick else (1, 5, 10, 20)
     print("name,us_per_call,derived")
@@ -37,6 +86,8 @@ def main() -> None:
     kernel_bench.main()
     roofline_bench.main()
     fusion_bench.main(calls=20 if quick else 50)
+    sparse_bench.main(calls=10 if quick else 20)
+    aggregate()
 
 
 if __name__ == "__main__":

@@ -13,23 +13,30 @@ jax-traceable, so the same registry serves two execution modes:
 Two physical representations are supported, mirroring SystemDS's
 dense/sparse blocks:
 
-  * dense  — jnp arrays (fp64 default on the lifecycle path, like SystemDS)
-  * sparse — jax.experimental.sparse.BCOO for 2D matrices below a density
-             threshold; matmul/gram/xtv stay sparse, everything else
-             densifies (TPU adaptation note in DESIGN.md §2a: sparsity
-             exploitation is block-level on TPU, value-level on CPU).
+  * dense — jnp arrays (fp64 default on the lifecycle path, like SystemDS)
+  * bcoo  — jax.experimental.sparse.BCOO for 2D matrices below the shared
+            density threshold (`dag.SPARSE_THRESHOLD`).
 
-The `gram` op routes through `repro.kernels.gram.ops` which picks the
-Pallas TPU kernel on TPU and the jnp path elsewhere.
+Formats are assigned at *compile time* by `repro.core.compiler
+.assign_formats` (size/sparsity propagation on the HOP DAG), and kernels
+are selected per (op, input formats) at build time — there are no
+runtime `is_sparse` branches on the hot path, so BCOO values trace
+straight through fused jit segments. Ops without a registered sparse
+variant get an automatic densify boundary (`BCOO.todense` is itself a
+traceable primitive). `gram`/`xtv` route through `repro.kernels.gram`
+(dense Pallas on TPU) and `repro.kernels.spmm` (block-masked sparse
+Pallas on TPU; BCOO math elsewhere).
 """
 from __future__ import annotations
 
 from functools import lru_cache, partial
-from typing import Any
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from .dag import SPARSE_THRESHOLD, Node  # single source of truth
 
 try:  # BCOO sparse support (available on CPU)
     from jax.experimental import sparse as jsparse
@@ -38,7 +45,13 @@ except Exception:  # pragma: no cover
     jsparse = None
     HAS_SPARSE = False
 
-SPARSE_THRESHOLD = 0.3
+# physical format names used across compiler/segments/runtime
+DENSE = "dense"
+BCOO = "bcoo"
+
+# Minimum element count before a leaf is worth converting to BCOO
+# (below this, conversion overhead beats any kernel savings).
+SPARSE_MIN_NUMEL = 1 << 12
 
 
 def is_sparse(x) -> bool:
@@ -49,12 +62,133 @@ def densify(x):
     return x.todense() if is_sparse(x) else x
 
 
+def block_ready(x):
+    """block_until_ready that also understands BCOO values."""
+    buf = x.data if is_sparse(x) else x
+    if hasattr(buf, "block_until_ready"):
+        buf.block_until_ready()
+
+
+def _bucket_nse(nse: int) -> int:
+    """Round a buffer size up to its power-of-two bucket (min 256)."""
+    return 256 if nse <= 256 else 1 << (nse - 1).bit_length()
+
+
+def sparsify(arr):
+    """Eager dense -> BCOO conversion (leaf binding on the bcoo format).
+
+    Built host-side with numpy: `BCOO.fromdense` dispatches a chain of
+    eager XLA ops (count/argwhere/gather) costing ~10 ms per bind at
+    benchmark sizes — ~100x the numpy scan — and leaf conversion is on
+    every call path of a prepared script.
+
+    The nse is padded up to a power-of-two bucket with zero-valued
+    duplicates of the last index. nse is part of the BCOO aval — and
+    therefore of every fused executable's signature — so without
+    bucketing each fresh batch (distinct nnz) would re-trace and
+    recompile its segments; with it, batches of similar density share
+    warm executables at the cost of ≤ 2x sparse buffer slack. Zero
+    padding is exact: BCOO ops treat duplicate indices additively.
+    """
+    a = np.asarray(arr)
+    if a.ndim != 2:  # BCOO leaves are matrices; anything else stays dense
+        return jnp.asarray(a)
+    rows, cols = np.nonzero(a)
+    # np.nonzero is row-major: indices are sorted (and pre-padding,
+    # unique) by construction, which lets sparse rules skip a sort
+    indices = np.ascontiguousarray(
+        np.stack([rows, cols], axis=1).astype(np.int32))
+    data = a[rows, cols]
+    nse = len(data)
+    pad = min(_bucket_nse(nse), a.size) - nse
+    if pad > 0:
+        tail = indices[-1:] if nse else np.zeros((1, 2), dtype=np.int32)
+        indices = np.concatenate([indices, np.repeat(tail, pad, axis=0)])
+        data = np.concatenate([data, np.zeros(pad, dtype=data.dtype)])
+    # unique_indices is always False so every bind in a bucket carries
+    # identical pytree flags — a pad==0 bind must not fork (or collide
+    # with) the executables its padded neighbours compiled
+    return jsparse.BCOO((jnp.asarray(data), jnp.asarray(indices)),
+                        shape=a.shape, indices_sorted=True,
+                        unique_indices=False)
+
+
 def maybe_sparsify(arr, sparsity_est: float):
-    """Convert a 2D array to BCOO when the estimate says it pays off."""
+    """Convert a 2D array to BCOO when the estimate says it pays off.
+
+    Legacy eager heuristic — plan execution now uses the compile-time
+    format assignment (`compiler.assign_formats`); this remains for
+    standalone/array-level callers.
+    """
     if (HAS_SPARSE and sparsity_est < SPARSE_THRESHOLD
-            and getattr(arr, "ndim", 0) == 2 and arr.size > 1 << 16):
+            and getattr(arr, "ndim", 0) == 2
+            and arr.size >= SPARSE_MIN_NUMEL):
         return jsparse.BCOO.fromdense(arr)
     return arr
+
+
+# ---------------------------------------------------------------------------
+# Compile-time format propagation (consumed by compiler.assign_formats)
+# ---------------------------------------------------------------------------
+
+# Unary ops with f(0) == 0: applying them to BCOO .data preserves the
+# sparsity structure exactly. Single source for both the format rule
+# (infer_format) and the sparse kernel registrations below — an op in
+# one but not the other would let the compiler assign a BCOO output
+# with no kernel to produce it.
+_ZERO_PRESERVING_FNS = {
+    "neg": jnp.negative, "abs": jnp.abs, "sqrt": jnp.sqrt,
+    "sign": jnp.sign, "round": jnp.round, "floor": jnp.floor,
+    "ceil": jnp.ceil,
+}
+ZERO_PRESERVING_UNARY = frozenset(_ZERO_PRESERVING_FNS)
+
+
+def leaf_format(node: Node) -> str:
+    """Physical format for an input leaf, from propagated estimates."""
+    if (HAS_SPARSE and len(node.shape) == 2
+            and node.sparsity < SPARSE_THRESHOLD
+            and node.numel >= SPARSE_MIN_NUMEL):
+        return BCOO
+    return DENSE
+
+
+def bcoo_passthrough_arg(node: Node) -> Optional[int]:
+    """Index of the input whose BCOO structure passes through `node`
+    unchanged, or None for dense-producing ops.
+
+    The single definition of "structure-preserving" shared by the
+    format rule (`infer_format`) and the cost model
+    (`costmodel._exec_sparsity`) — one list to extend when a new sparse
+    kernel is registered.
+    """
+    if node.op == "t" or node.op in ZERO_PRESERVING_UNARY:
+        return 0
+    if node.op == "mul" and len(node.inputs) == 2:
+        a, b = node.inputs
+        if b.shape == ():  # matrix * scalar keeps the sparse structure
+            return 0
+        if a.shape == ():
+            return 1
+    return None
+
+
+def infer_format(node: Node, in_fmts: tuple[str, ...]) -> str:
+    """Output format of one HOP given its input formats.
+
+    Sparse outputs are produced only by ops that preserve the BCOO
+    structure for free (see `bcoo_passthrough_arg`); everything else —
+    including sparse matmul/gram/xtv, whose products are dense-ish —
+    produces dense. Dense never re-sparsifies mid-plan:
+    `BCOO.fromdense` inside a trace needs a static nse bound, and a
+    wrong estimate would silently drop values.
+    """
+    if not HAS_SPARSE or BCOO not in in_fmts:
+        return DENSE
+    i = bcoo_passthrough_arg(node)
+    if i is not None and in_fmts[i] == BCOO:
+        return BCOO
+    return DENSE
 
 
 # ---------------------------------------------------------------------------
@@ -62,26 +196,17 @@ def maybe_sparsify(arr, sparsity_est: float):
 # ---------------------------------------------------------------------------
 
 def _gram(x):
-    if is_sparse(x):
-        # sparse-dense: flops ∝ nnz·n (sparse-sparse lowering is slow)
-        return densify(x.T @ x.todense())
     from repro.kernels.gram import ops as gram_ops
-    return gram_ops.gram(x)
+    return gram_ops.gram(densify(x))
 
 
 def _xtv(x, v):
-    if is_sparse(x):
-        out = x.T @ densify(v)
-        return densify(out)
     from repro.kernels.gram import ops as gram_ops
-    return gram_ops.xtv(x, v)
+    return gram_ops.xtv(densify(x), densify(v))
 
 
 def _matmul(a, b):
-    if is_sparse(a) or is_sparse(b):
-        out = a @ b
-        return densify(out)
-    return a @ b
+    return densify(a) @ densify(b)
 
 
 def _solve(a, b):
@@ -148,6 +273,16 @@ KernelFn = Any  # Callable[..., array]
 
 _KERNEL_BUILDERS: dict[str, Any] = {}
 
+# Sparse kernel variants, keyed by (op, input format tuple) and mapping
+# to (builder, output format). Selected at build time from the
+# compile-time format assignment — every entry is a pure jit-traceable
+# fn over BCOO/array operands (no eager densify). A variant is only
+# picked when its output format matches the one the compiler assigned
+# (e.g. `mul(bcoo, scalar)` keeps BCOO, `mul(bcoo, matrix)` falls back
+# to the dense kernel through a densify boundary).
+_SPARSE_KERNEL_BUILDERS: dict[tuple[str, tuple[str, ...]],
+                              tuple[Any, str]] = {}
+
 # Ops that must never be traced into a fused jit segment (data-dependent
 # python control flow, host side effects, dynamic output shapes). All
 # current kernels are traceable; the segmenter breaks segments here so
@@ -163,17 +298,37 @@ def register_kernel(op: str):
     return deco
 
 
+def register_sparse_kernel(op: str, in_fmts: tuple[str, ...],
+                           out_fmt: str = DENSE):
+    """Register a sparse variant for (op, input formats) -> out_fmt."""
+    def deco(builder):
+        _SPARSE_KERNEL_BUILDERS[(op, tuple(in_fmts))] = (builder, out_fmt)
+        return builder
+    return deco
+
+
 def has_kernel(op: str) -> bool:
     return op in _KERNEL_BUILDERS
 
 
-def get_kernel(op: str, attrs: dict[str, Any]) -> KernelFn:
+def get_kernel(op: str, attrs: dict[str, Any],
+               in_fmts: Optional[tuple[str, ...]] = None,
+               out_fmt: str = DENSE) -> KernelFn:
     """Build the pure kernel for one instruction.
 
     `attrs` is the node's attribute dict plus `_shape` (output shape) for
-    generator ops. The returned fn is closed over static attrs only, so
-    it is safe to call standalone or inside a `jax.jit` trace.
+    generator ops; `in_fmts`/`out_fmt` are the compile-time formats from
+    `compiler.assign_formats` (None ≡ all dense). When a BCOO input has a
+    registered sparse variant producing the assigned output format it is
+    selected here, at build time; any op without one gets the dense
+    kernel, whose `densify` calls become traced `BCOO.todense`
+    boundaries. The returned fn is closed over static attrs only, so it
+    is safe to call standalone or inside a `jax.jit` trace.
     """
+    if in_fmts and BCOO in in_fmts:
+        entry = _SPARSE_KERNEL_BUILDERS.get((op, tuple(in_fmts)))
+        if entry is not None and entry[1] == out_fmt:
+            return entry[0](attrs)
     builder = _KERNEL_BUILDERS.get(op)
     if builder is None:
         raise NotImplementedError(f"op {op!r}")
@@ -215,12 +370,58 @@ def _build_xtv(attrs):
 
 @register_kernel("t")
 def _build_t(attrs):
-    return lambda x: x.T if is_sparse(x) else jnp.transpose(densify(x))
+    return lambda x: jnp.transpose(densify(x))
 
 
 @register_kernel("solve")
 def _build_solve(attrs):
     return _solve
+
+
+# -- sparse (bcoo) kernel variants -------------------------------------------
+# All jit-traceable: BCOO matmul/transpose and `todense` are primitives.
+
+if HAS_SPARSE:
+    @register_sparse_kernel("gram", (BCOO,))
+    def _sparse_gram(attrs):
+        from repro.kernels.spmm import ops as spmm_ops
+        return spmm_ops.gram_bcoo
+
+    @register_sparse_kernel("xtv", (BCOO, DENSE))
+    def _sparse_xtv(attrs):
+        from repro.kernels.spmm import ops as spmm_ops
+        return spmm_ops.xtv_bcoo
+
+    @register_sparse_kernel("matmul", (BCOO, DENSE))
+    def _sparse_matmul(attrs):
+        from repro.kernels.spmm import ops as spmm_ops
+        return spmm_ops.matmul_bcoo
+
+    # (DENSE, BCOO) needs no entry: the dense fallback's densify
+    # boundary computes the identical dense @ todense(b)
+    register_sparse_kernel("matmul", (BCOO, BCOO))(
+        lambda attrs: (lambda a, b: a @ b.todense()))
+    register_sparse_kernel("t", (BCOO,), BCOO)(
+        lambda attrs: (lambda x: x.T))
+
+    def _bcoo_map(fn):
+        """Apply a zero-preserving elementwise fn to BCOO values only."""
+        def run(x):
+            return jsparse.BCOO((fn(x.data), x.indices), shape=x.shape,
+                                indices_sorted=x.indices_sorted,
+                                unique_indices=x.unique_indices)
+        return run
+
+    for _op, _fn in _ZERO_PRESERVING_FNS.items():
+        register_sparse_kernel(_op, (BCOO,), BCOO)(
+            (lambda fn: lambda attrs: _bcoo_map(fn))(_fn))
+
+    # only selected when the compiler assigned a BCOO output, i.e. the
+    # dense operand is a scalar (see infer_format)
+    register_sparse_kernel("mul", (BCOO, DENSE), BCOO)(
+        lambda attrs: (lambda x, s: _bcoo_map(lambda d: d * s)(x)))
+    register_sparse_kernel("mul", (DENSE, BCOO), BCOO)(
+        lambda attrs: (lambda s, x: _bcoo_map(lambda d: s * d)(x)))
 
 
 @register_kernel("cholesky")
@@ -326,17 +527,20 @@ def _build_rand(attrs):
 
 
 @lru_cache(maxsize=4096)
-def _kernel_cached(op: str, attrs: tuple, shape: tuple) -> KernelFn:
+def _kernel_cached(op: str, attrs: tuple, shape: tuple,
+                   in_fmts: Optional[tuple], out_fmt: str) -> KernelFn:
     d = dict(attrs)
     d["_shape"] = shape
-    return get_kernel(op, d)
+    return get_kernel(op, d, in_fmts=in_fmts, out_fmt=out_fmt)
 
 
-def kernel_for_node(node) -> KernelFn:
+def kernel_for_node(node, in_fmts: Optional[tuple[str, ...]] = None,
+                    out_fmt: str = DENSE) -> KernelFn:
     """Memoized kernel lookup for a HOP node — kernels depend only on
-    (op, attrs, shape), so repeated plan executions (the interpreter
-    loop, segment lowering) reuse one closure instead of rebuilding."""
-    return _kernel_cached(node.op, node.attrs, node.shape)
+    (op, attrs, shape, formats), so repeated plan executions (the
+    interpreter loop, segment lowering) reuse one closure instead of
+    rebuilding."""
+    return _kernel_cached(node.op, node.attrs, node.shape, in_fmts, out_fmt)
 
 
 def execute_op(op: str, attrs: dict[str, Any], inputs: list) -> Any:

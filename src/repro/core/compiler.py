@@ -6,12 +6,23 @@ construction), memory estimates pick an execution target per instruction
 (local vs distributed — the analogue of CP vs Spark instructions), and
 the result is a topologically ordered instruction sequence executed by
 `repro.core.runtime.LineageRuntime`.
+
+Two compile-time physical decisions ride on the propagated estimates:
+
+  * format assignment (`assign_formats` / `Plan.formats_for`) — every
+    value is pinned to `dense` or `bcoo` from its sparsity estimate, so
+    kernel variants are selected at build time and sparse plans fuse;
+  * probe-point selection (`Instruction.probe`) — only intermediates
+    whose estimated cost clears the reuse cache's worth-keeping
+    threshold become lineage-reuse probe points; segments stay maximal
+    between probes instead of degenerating to one op per segment.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
 from typing import Optional
 
+from . import costmodel
 from .dag import LTensor, Node
 from .rewrites import run_rewrites
 
@@ -28,6 +39,8 @@ class Instruction:
     input_ids: tuple[int, ...]
     target: str  # 'local' | 'distributed'
     last_use_of: tuple[int, ...] = ()  # uids freed after this instruction
+    probe: bool = False   # lineage-reuse probe point (cost-gated)
+    est_cost_s: float = 0.0  # compile-time cost estimate behind `probe`
 
 
 @dataclass
@@ -39,6 +52,8 @@ class Plan:
     reuse_enabled: bool = False
     # segmentation memo: {reuse_active: [Segment, ...]}
     _segments: dict = field(default_factory=dict, repr=False)
+    # format-assignment memo: {sparse_enabled: {uid: fmt}}
+    _formats: dict = field(default_factory=dict, repr=False)
 
     def count_ops(self) -> dict[str, int]:
         out: dict[str, int] = {}
@@ -49,9 +64,10 @@ class Plan:
     def segments_for(self, reuse_active: bool):
         """Fusable segments of this plan (lazily computed, memoized).
 
-        With an active reuse cache every cacheable intermediate must stay
-        observable, so segmentation degenerates to per-instruction; see
-        `repro.core.segments`.
+        With an active reuse cache, cost-gated probe points
+        (`Instruction.probe`) force segment boundaries so those
+        intermediates stay observable; everything between probes still
+        fuses. See `repro.core.segments`.
         """
         reuse_active = bool(reuse_active)
         got = self._segments.get(reuse_active)
@@ -61,24 +77,56 @@ class Plan:
             self._segments[reuse_active] = got
         return got
 
-    def _ins_line(self, ins: Instruction) -> str:
-        args = ",".join(f"%{i}" for i in ins.input_ids)
+    def formats_for(self, sparse: bool) -> dict[int, str]:
+        """Compile-time physical format per value uid (lazily memoized).
+
+        Only non-dense assignments are recorded — an all-dense plan maps
+        to `{}` whether or not `sparse` is set, so identical plans share
+        jit executables across `sparse_inputs` modes. Callers read
+        `formats.get(uid, backend.DENSE)`.
+        """
+        sparse = bool(sparse)
+        got = self._formats.get(sparse)
+        if got is None:
+            got = assign_formats(self, sparse)
+            self._formats[sparse] = got
+        return got
+
+    def _ins_line(self, ins: Instruction, reuse_active: bool = False,
+                  fmts: Optional[dict] = None) -> str:
+        fmts = fmts or {}
+
+        def ref(uid: int) -> str:
+            f = fmts.get(uid, "dense")
+            return f"%{uid}" if f == "dense" else f"%{uid}:{f}"
+
+        args = ",".join(ref(i) for i in ins.input_ids)
         attrs = {k: v for k, v in ins.node.attrs if k != "index"}
+        fmt = fmts.get(ins.out_id, "dense")
+        tags = f" fmt={fmt}" if fmt != "dense" else ""
+        if reuse_active and ins.probe:
+            tags += " [reuse-probe]"
         return (f"%{ins.out_id} = [{ins.target[0].upper()}] "
                 f"{ins.node.op}({args}) {ins.node.shape} "
-                f"sp={ins.node.sparsity:.3f} {attrs if attrs else ''}")
+                f"sp={ins.node.sparsity:.3f}{tags} "
+                f"{attrs if attrs else ''}").rstrip()
 
     def explain(self, segments: bool = True,
-                reuse_active: Optional[bool] = None) -> str:
+                reuse_active: Optional[bool] = None,
+                sparse: bool = False) -> str:
         """EXPLAIN-style plan dump (SystemDS -explain) with segment
-        annotations showing how instructions fuse into jit executables.
+        annotations showing how instructions fuse into jit executables,
+        the physical format assigned to each value (`fmt=bcoo`), and
+        which instructions are cost-gated reuse-probe boundaries.
 
         `reuse_active` defaults to the flag the plan was compiled with;
         pass the executing runtime's actual cache state (cache is not
-        None) to see the segmentation that run will use.
+        None) to see the segmentation that run will use. `sparse`
+        mirrors `LineageRuntime(sparse_inputs=...)`.
         """
         if reuse_active is None:
             reuse_active = self.reuse_enabled
+        fmts = self.formats_for(sparse)
         lines = []
         if segments and self.instructions:
             for seg in self.segments_for(reuse_active):
@@ -88,12 +136,44 @@ class Plan:
                     f"-- segment {seg.index} [{seg.target}] {kind} "
                     f"{len(seg.instructions)} op(s) key={seg.key[:10]} "
                     f"-> {outs}")
-                lines.extend(f"  {self._ins_line(ins)}"
+                lines.extend(f"  {self._ins_line(ins, reuse_active, fmts)}"
                              for ins in seg.instructions)
         else:
-            lines.extend(self._ins_line(ins) for ins in self.instructions)
+            lines.extend(self._ins_line(ins, reuse_active, fmts)
+                         for ins in self.instructions)
         lines.append("outputs: " + ", ".join(f"%{i}" for i in self.output_ids))
         return "\n".join(lines)
+
+
+def assign_formats(plan: "Plan", sparse: bool) -> dict[int, str]:
+    """Format-assignment pass: pin every value to `dense` or `bcoo`.
+
+    A forward walk over the instruction stream using the sparsity
+    estimates propagated on the DAG (SystemDS §3.2 size propagation):
+    input leaves below the shared density threshold start as BCOO, and
+    `backend.infer_format` decides per op whether the sparse structure
+    survives (transpose, zero-preserving unaries, scalar scaling) or the
+    value densifies (everything else). The executor selects kernel
+    variants from this mapping at build time — no runtime `is_sparse`
+    branches — which is what lets sparse plans run fused.
+    """
+    from . import backend
+    fmt: dict[int, str] = {}
+    if not sparse or not backend.HAS_SPARSE:
+        return fmt  # empty mapping ≡ all dense
+    seen_leaves: set[int] = set()
+    for ins in plan.instructions:
+        for inp in ins.node.inputs:
+            if inp.op == "input" and inp.uid not in seen_leaves:
+                seen_leaves.add(inp.uid)
+                lf = backend.leaf_format(inp)
+                if lf != backend.DENSE:
+                    fmt[inp.uid] = lf
+        in_fmts = tuple(fmt.get(u, backend.DENSE) for u in ins.input_ids)
+        of = backend.infer_format(ins.node, in_fmts)
+        if of != backend.DENSE:
+            fmt[ins.out_id] = of
+    return fmt
 
 
 def topo_order(roots: list[Node]) -> list[Node]:
@@ -141,11 +221,14 @@ def compile_plan(outputs: list[LTensor], *, reuse_enabled: bool = False,
             continue
         op_bytes = n.est_bytes() + sum(i.est_bytes() for i in n.inputs)
         target = "distributed" if op_bytes > local_budget else "local"
+        cost = costmodel.est_cost_s(n)
         instructions.append(Instruction(
             node=n, out_id=n.uid,
             input_ids=tuple(i.uid for i in n.inputs),
             target=target,
-            last_use_of=tuple(frees_at.get(idx, ()))))
+            last_use_of=tuple(frees_at.get(idx, ())),
+            probe=cost >= costmodel.PROBE_MIN_COST_S,
+            est_cost_s=cost))
         sz = n.est_bytes()
         live_sizes[n.uid] = sz
         live += sz

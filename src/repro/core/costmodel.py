@@ -1,0 +1,128 @@
+"""Compile-time per-node cost model (SystemDS §3.2 cost-based compilation).
+
+Estimates the execution cost of a single HOP from its size/sparsity
+metadata alone, *before* anything runs. Two consumers:
+
+  * probe-point selection (`repro.core.compiler`) — an intermediate is a
+    lineage-reuse probe point only when its estimated cost clears the
+    cache's worth-keeping threshold (`reuse.MIN_CACHE_COST_S`), so
+    segments stay maximal between probes instead of degenerating to one
+    instruction per segment;
+  * format assignment — sparsity-scaled flop estimates keep the cost
+    model consistent with the executor's dense/bcoo decision (both sides
+    read `dag.SPARSE_THRESHOLD`).
+
+The model is deliberately coarse — a per-op launch overhead plus a
+roofline term max'd over compute and memory. Heavy operators (BLAS-class
+calls, factorizations) carry a real dispatch/launch constant: that
+mirrors what the per-instruction interpreter actually measures for them
+(an eager dispatch with a device sync never costs less than ~20 µs), so
+estimate-gated probing selects the same intermediates the measured-cost
+gate used to keep.  Deeper per-instruction analysis lives in
+`repro.launch.hlocost`, which needs compiled HLO and is therefore not
+available at plan-compile time.
+"""
+from __future__ import annotations
+
+from .dag import SPARSE_THRESHOLD, Node
+from .reuse import MIN_CACHE_COST_S
+
+# Calibration: effective single-stream rates for the local backend.
+# These are intentionally conservative (well below hardware peak) so
+# borderline intermediates err toward "worth caching".
+PEAK_FLOPS = 4e9     # flop/s
+PEAK_BW = 2e10       # bytes/s
+
+# Per-op launch overhead (seconds): BLAS-class / factorization kernels
+# pay a real dispatch+sync constant; cheap elementwise ops are fusable
+# and nearly free to re-issue.
+HEAVY_OP_BASE_S = 25e-6
+LIGHT_OP_BASE_S = 1e-6
+
+# Ops with BLAS/LAPACK-class launch cost regardless of operand size.
+HEAVY_OPS = frozenset({
+    "matmul", "gram", "xtv", "solve", "cholesky", "inv",
+})
+
+# An intermediate becomes a lineage-reuse probe point when its estimated
+# cost clears the cache's own worth-keeping threshold: anything cheaper
+# is, by the cache's definition, not worth a pool entry — or a segment
+# boundary.
+PROBE_MIN_COST_S = MIN_CACHE_COST_S
+
+
+def _numel(shape) -> int:
+    n = 1
+    for d in shape:
+        n *= d
+    return n
+
+
+def _exec_sparsity(n: Node) -> float:
+    """Density the executor can actually exploit for operand `n`.
+
+    Mirrors the format pass exactly: BCOO only flows from a qualifying
+    input leaf through the structure-preserving ops (transpose,
+    zero-preserving unaries, scalar scaling) — dense never re-sparsifies
+    mid-plan. So walk that chain to its source; anything else executes
+    dense and gets no flop discount, no matter how sparse its values.
+    Mode-independent by design: the same estimate (and therefore the
+    same probe set and cache-entry costs) is used whether or not the
+    executing runtime enables sparse_inputs, which is what keeps reuse
+    behaviour identical across runtimes sharing one cache.
+    """
+    from . import backend
+    if not backend.HAS_SPARSE:
+        return 1.0
+    cur = n
+    while cur.op != "input":
+        i = backend.bcoo_passthrough_arg(cur)
+        if i is None:
+            return 1.0  # produced by a dense-output op
+        cur = cur.inputs[i]
+    if backend.leaf_format(cur) == backend.BCOO:
+        return max(cur.sparsity, 1e-6)
+    return 1.0
+
+
+def node_flops(n: Node) -> float:
+    """Estimated floating-point work of one HOP (sparsity-aware)."""
+    op = n.op
+    out = _numel(n.shape)
+    if op == "matmul":
+        a, b = n.inputs
+        k = a.shape[-1]
+        return 2.0 * out * k * min(_exec_sparsity(a), _exec_sparsity(b))
+    if op == "gram":
+        (a,) = n.inputs
+        m = a.shape[0]
+        return 2.0 * out * m * _exec_sparsity(a)
+    if op == "xtv":
+        a, v = n.inputs
+        m = a.shape[0]
+        return 2.0 * out * m * _exec_sparsity(a)
+    if op in ("solve", "inv"):
+        k = n.inputs[0].shape[0]
+        return (2.0 / 3.0) * k ** 3 + 2.0 * k * k * out
+    if op == "cholesky":
+        k = n.shape[0]
+        return k ** 3 / 3.0
+    if op in ("sum", "mean", "max", "min", "trace", "nnz", "colSums",
+              "rowSums", "colMeans", "rowMeans", "colMaxs", "colMins",
+              "colVars", "cumsum"):
+        return float(max((_numel(i.shape) for i in n.inputs), default=out))
+    # elementwise / structural / generators: ~1 flop per output element
+    return float(out)
+
+
+def node_bytes(n: Node) -> float:
+    """Estimated memory traffic: inputs read + output written, at the
+    format-aware sizes from `Node.est_bytes` (sparse operands charge
+    their compressed footprint)."""
+    return float(n.est_bytes() + sum(i.est_bytes() for i in n.inputs))
+
+
+def est_cost_s(n: Node) -> float:
+    """Estimated wall-clock seconds to execute one HOP standalone."""
+    base = HEAVY_OP_BASE_S if n.op in HEAVY_OPS else LIGHT_OP_BASE_S
+    return base + max(node_flops(n) / PEAK_FLOPS, node_bytes(n) / PEAK_BW)

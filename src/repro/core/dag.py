@@ -23,6 +23,14 @@ import numpy as np
 
 _counter = itertools.count()
 
+# Density below which a 2D matrix is worth a sparse physical
+# representation. Single source of truth shared by the cost model
+# (`Node.est_bytes`, `repro.core.costmodel`), the compile-time format
+# assignment pass (`repro.core.compiler.assign_formats`), and the
+# executor (`repro.core.backend`), so the compiler and the runtime
+# always agree on when sparse pays off.
+SPARSE_THRESHOLD = 0.3
+
 # opcodes with their arity class; used for validation only
 ELEMENTWISE_BINARY = {
     "add", "sub", "mul", "div", "pow", "min2", "max2",
@@ -66,7 +74,7 @@ class Node:
         """Memory estimate in bytes (dense; sparse gets a CSR-like discount)."""
         itemsize = np.dtype(self.dtype).itemsize
         dense = self.numel * itemsize
-        if self.sparsity < 0.4 and len(self.shape) == 2:
+        if self.sparsity < SPARSE_THRESHOLD and len(self.shape) == 2:
             # values + column idx + row ptr, MCSR-style estimate
             nnz = int(self.numel * self.sparsity)
             return nnz * (itemsize + 4) + 4 * (self.shape[0] + 1)
@@ -152,7 +160,7 @@ def make_node(op: str, inputs: Sequence[Node], shape, dtype, sparsity,
     return Node(op=op, inputs=tuple(inputs),
                 attrs=tuple(sorted(attrs.items())),
                 shape=tuple(int(d) for d in shape), dtype=np.dtype(dtype),
-                sparsity=float(sparsity))
+                sparsity=min(max(float(sparsity), 0.0), 1.0))
 
 
 # --------------------------------------------------------------------------

@@ -21,6 +21,11 @@ from typing import Any, Callable, Optional
 
 import jax
 
+try:
+    from jax.experimental.sparse import BCOO as _BCOO
+except Exception:  # pragma: no cover
+    _BCOO = ()
+
 
 @dataclass
 class JitCacheStats:
@@ -41,13 +46,24 @@ def arg_signature(args) -> tuple:
     weak_type matters: AOT-compiled executables reject aval mismatches,
     and a weak-typed jax scalar (e.g. a literal crossing a segment
     boundary) has a different aval than a strong-typed array of the same
-    shape/dtype.
+    shape/dtype. BCOO arguments additionally carry their nse (buffer
+    size) — two sparse matrices of equal shape but different nnz have
+    different avals and need separate executables.
     """
-    return tuple(
-        (tuple(getattr(a, "shape", ())),
-         str(getattr(a, "dtype", type(a).__name__)),
-         bool(getattr(a, "weak_type", False)))
-        for a in args)
+    out = []
+    for a in args:
+        if _BCOO and isinstance(a, _BCOO):
+            # pytree flags are part of the aval too: an executable
+            # compiled for unique_indices=True rejects a False-flagged
+            # BCOO of identical shape/dtype/nse
+            out.append(("bcoo", tuple(a.shape), str(a.dtype), int(a.nse),
+                        bool(a.unique_indices), bool(a.indices_sorted)))
+        else:
+            out.append(
+                (tuple(getattr(a, "shape", ())),
+                 str(getattr(a, "dtype", type(a).__name__)),
+                 bool(getattr(a, "weak_type", False))))
+    return tuple(out)
 
 
 class JitProgramCache:

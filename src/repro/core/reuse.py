@@ -15,18 +15,45 @@ import time
 from dataclasses import dataclass, field
 from typing import Any, Optional
 
+import numpy as np
+
 # Below this compute cost (seconds) an intermediate is not worth caching.
+# The runtime applies this gate at *compile time* via the cost model
+# (`repro.core.costmodel.PROBE_MIN_COST_S`) and calls `put(gated=False)`;
+# the measured-cost check below only applies to external callers using
+# the cache standalone.
 MIN_CACHE_COST_S = 20e-6
-# Below this size we always cache (scalars/metadata are free to keep).
+# Standalone-caller admission only: below this size a measured-cheap
+# value is kept anyway (scalars/metadata cost nothing to hold). The
+# runtime's compile-time probe gate does not consult this — sub-threshold
+# intermediates are fused through, not cached.
 ALWAYS_CACHE_BYTES = 1 << 12
 
 
 def nbytes(value) -> int:
+    """True byte size of a cached value.
+
+    Sparse (BCOO) entries are accounted at their sparse size —
+    data + indices buffers — checked *before* the generic `.nbytes`
+    attribute so wrappers exposing a dense-shaped `nbytes` don't
+    overcharge, and so entries lacking `.nbytes` entirely don't fall
+    through to a stub size that would break eviction pressure.
+    """
+    data = getattr(value, "data", None)  # BCOO and friends
+    indices = getattr(value, "indices", None)
+    if data is not None and indices is not None:
+        total = 0
+        for buf in (data, indices):
+            nb = getattr(buf, "nbytes", None)
+            if nb is None:
+                nb = int(np.size(buf)) * np.dtype(buf.dtype).itemsize
+            total += int(nb)
+        return total
     if hasattr(value, "nbytes"):
         return int(value.nbytes)
-    data = getattr(value, "data", None)  # BCOO
-    if data is not None and hasattr(data, "nbytes"):
-        return int(data.nbytes) + int(value.indices.nbytes)
+    size, dtype = getattr(value, "size", None), getattr(value, "dtype", None)
+    if size is not None and dtype is not None:
+        return int(size) * np.dtype(dtype).itemsize
     return 64
 
 
@@ -78,9 +105,14 @@ class ReuseCache:
         self.stats.time_saved += e.cost
         return e.value
 
-    def put(self, lhash: str, value: Any, cost: float) -> None:
+    def put(self, lhash: str, value: Any, cost: float,
+            gated: bool = True) -> None:
+        """Insert an entry. `gated=False` skips the measured-cost
+        worth-keeping check — used by the runtime, whose compile-time
+        cost model already admitted the value as a probe point (keeps
+        admission identical across interpreter and fused modes)."""
         size = nbytes(value)
-        if cost < MIN_CACHE_COST_S and size > ALWAYS_CACHE_BYTES:
+        if gated and cost < MIN_CACHE_COST_S and size > ALWAYS_CACHE_BYTES:
             return  # not worth the pool space
         if size > self.budget:
             return

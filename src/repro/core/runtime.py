@@ -20,7 +20,8 @@ import numpy as np
 
 from . import backend
 from .compiler import Plan, compile_plan
-from .dag import LEAVES, LTensor, Node, _lhash_rec, input_tensor
+from .dag import (LEAVES, LTensor, Node, _fingerprint, _lhash_rec,
+                  input_tensor)  # _fingerprint: PreparedScript lineage
 from .jit_cache import get_jit_cache
 from .reuse import ReuseCache
 
@@ -49,16 +50,21 @@ class LineageRuntime:
     def __init__(self, cache: Optional[ReuseCache] = None,
                  opt_level: int = 2, sparse_inputs: bool = False,
                  fuse: bool = True):
-        # sparse_inputs: BCOO physical representation for low-density
-        # leaves. Default OFF: measured on this backend (XLA-CPU),
-        # BCOO gram at density 0.1 is ~4x SLOWER than dense — SystemDS's
-        # hand-tuned CSR kernels have no XLA analogue (DESIGN.md §2a,
-        # EXPERIMENTS.md §Baseline). The path stays for API fidelity.
+        # sparse_inputs: allow the BCOO physical representation. The
+        # compile-time format-assignment pass (compiler.assign_formats)
+        # pins each value to dense/bcoo from its sparsity estimate and
+        # kernels are selected per format at build time, so sparse plans
+        # run through the fused segment engine like dense ones. Default
+        # OFF: measured on XLA-CPU, value-level BCOO gram at density 0.1
+        # is slower than dense (DESIGN.md §2a, EXPERIMENTS.md §Baseline);
+        # on TPU the bcoo format routes to the block-masked Pallas SpMM
+        # kernels (repro.kernels.spmm).
         #
         # fuse: execute plans as jit-compiled segments (see
-        # repro.core.segments). BCOO values are not traced through the
-        # fused path, so sparse_inputs forces the per-instruction
-        # interpreter.
+        # repro.core.segments). With an active ReuseCache the segmenter
+        # breaks only at cost-gated probe points, and this runtime
+        # probes/populates the cache at those boundaries with hit
+        # behaviour identical to the fuse=False interpreter.
         self.cache = cache
         self.opt_level = opt_level
         self.sparse_inputs = sparse_inputs
@@ -77,14 +83,9 @@ class LineageRuntime:
                  leaf_values: Optional[dict[int, Any]] = None,
                  leaf_lineage: Optional[dict[int, str]] = None) -> list[np.ndarray]:
         values, lin = self._bind_leaves(plan, leaf_values, leaf_lineage)
-        if self.fuse and not self.sparse_inputs and self.cache is None:
-            self._run_segments(plan, values)
+        if self.fuse:
+            self._run_segments(plan, values, lin)
         else:
-            # Reuse-active execution IS the boundary interpreter: with a
-            # cache, segmentation degenerates to one instruction per
-            # segment (see segments.py), and the per-instruction loop
-            # probes/populates the cache at exactly those boundaries with
-            # cost measurements identical across fuse modes.
             self._run_instructions(plan, values, lin)
         return [backend.to_numpy(values[i]) for i in plan.output_ids]
 
@@ -99,6 +100,7 @@ class LineageRuntime:
             lin = dict(LEAVES.lineage)
             if leaf_lineage:
                 lin.update(leaf_lineage)
+        fmts = plan.formats_for(self.sparse_inputs)
         for ins in plan.instructions:
             for inp in ins.node.inputs:
                 if inp.op == "input" and inp.uid not in values:
@@ -110,11 +112,14 @@ class LineageRuntime:
                     else:
                         raise KeyError(
                             f"unbound input leaf {inp.attr('name')}")
+                    # sparsify per bind, never memoized: a cached
+                    # conversion cannot detect in-place mutation of the
+                    # source array without a full-content scan that
+                    # costs as much as the conversion itself
                     arr = np.asarray(src)
-                    val = arr
-                    if self.sparse_inputs:
-                        val = backend.maybe_sparsify(arr, inp.sparsity)
-                    values[inp.uid] = val
+                    if fmts.get(inp.uid) == backend.BCOO:
+                        arr = backend.sparsify(arr)
+                    values[inp.uid] = arr
         for r in plan.roots:  # outputs that are themselves leaves
             if r.op == "input" and r.uid not in values:
                 values[r.uid] = (leaf_values or LEAVES.values)[r.uid]
@@ -123,68 +128,161 @@ class LineageRuntime:
     # ------------------------------------------------------------------
     def _run_instructions(self, plan: Plan, values: dict[int, Any],
                           lin: dict[int, str]) -> None:
-        """Per-instruction interpreter (the `fuse=False` fallback and the
-        BCOO path); probes/populates the reuse cache at every op."""
+        """Per-instruction interpreter (the `fuse=False` fallback);
+        probes/populates the reuse cache at cost-gated probe points —
+        the same compile-time set the segment executor uses, so hit
+        behaviour is identical across both modes."""
+        fmts = plan.formats_for(self.sparse_inputs)
         lmemo: dict[int, str] = {}  # lineage-hash memo shared across the run
         for ins in plan.instructions:
             self.stats.instructions += 1
             node = ins.node
             lhash = None
-            if self.cache is not None:
+            if self.cache is not None and ins.probe:
                 lhash = _lhash_rec(node, lin, lmemo)
                 hit = self.cache.probe(lhash)
                 if hit is not None:
-                    values[ins.out_id] = hit
+                    values[ins.out_id] = _coerce_format(
+                        hit, fmts.get(ins.out_id, backend.DENSE))
                     self.stats.reused += 1
                     self._free(values, ins.last_use_of, plan)
                     continue
             ins_inputs = [values[i] for i in ins.input_ids]
+            kern = backend.kernel_for_node(
+                node,
+                in_fmts=tuple(fmts.get(u, backend.DENSE)
+                              for u in ins.input_ids),
+                out_fmt=fmts.get(ins.out_id, backend.DENSE))
             t0 = time.perf_counter()
-            out = backend.kernel_for_node(node)(*ins_inputs)
-            if hasattr(out, "block_until_ready"):
-                out.block_until_ready()
+            out = kern(*ins_inputs)
+            backend.block_ready(out)
             dt = time.perf_counter() - t0
             self.stats.executed += 1
             self.stats.exec_time += dt
             values[ins.out_id] = out
-            if self.cache is not None:
-                self.cache.put(lhash, out, dt)
+            if lhash is not None:
+                # admission was decided by the compile-time gate; store
+                # the *estimated* cost too — deterministic and identical
+                # across fuse modes, so eviction ordering (and therefore
+                # hit counts) cannot diverge under pool pressure the way
+                # measured wall-times would
+                self.cache.put(lhash, out, ins.est_cost_s, gated=False)
             self._free(values, ins.last_use_of, plan)
 
     # ------------------------------------------------------------------
-    def _run_segments(self, plan: Plan, values: dict[int, Any]) -> None:
-        """Segment executor (the fused, cache-less path): maximal fusable
-        runs replayed through cached jit executables."""
-        segments = plan.segments_for(False)
+    def _run_segments(self, plan: Plan, values: dict[int, Any],
+                      lin: dict[int, str]) -> None:
+        """Segment executor: maximal fusable runs replayed through cached
+        jit executables. With an active reuse cache, probe points are
+        segment-final (see segments.py): the cache is probed before a
+        probe-final segment runs — a hit skips the whole segment — and
+        populated from its output afterwards."""
+        reuse = self.cache is not None
+        segments = plan.segments_for(reuse)
+        fmts = plan.formats_for(self.sparse_inputs)
         jcache = get_jit_cache()
+        lmemo: dict[int, str] = {}
         for seg in segments:
             self.stats.segments += 1
             self.stats.instructions += len(seg.instructions)
+            last = seg.instructions[-1]
             args = [values[u] for u in seg.input_uids]
-            key, exe = jcache.lookup(seg.key, args)
-            if exe is None:
-                from .segments import build_segment_fn
-                exe, dt_trace = jcache.compile(
-                    key, build_segment_fn(seg), args)
-                self.stats.trace_time += dt_trace
-            else:
-                self.stats.jit_cache_hits += 1
-            t0 = time.perf_counter()
-            outs = exe(*args)
-            for o in outs:
-                if hasattr(o, "block_until_ready"):
-                    o.block_until_ready()
-            dt = time.perf_counter() - t0
+            seg_key = seg.key
+            # physical formats are part of the executable; all-dense
+            # segments share one executable across sparse_inputs modes
+            # (internal formats derive from the boundary ones)
+            boundary = (*seg.input_uids, *seg.output_uids)
+            if fmts and any(u in fmts for u in boundary):
+                fsig = ",".join(fmts.get(u, backend.DENSE)
+                                for u in boundary)
+                seg_key = f"{seg.key}|f:{fsig}"
+            lhash = None
+            if reuse and last.probe:
+                lhash = _lhash_rec(last.node, lin, lmemo)
+                hit = self.cache.probe(lhash)
+                if hit is not None:
+                    values[last.out_id] = _coerce_format(
+                        hit, fmts.get(last.out_id, backend.DENSE))
+                    self.stats.reused += 1
+                    rest = tuple(u for u in seg.output_uids
+                                 if u != last.out_id)
+                    if rest:
+                        # multi-output segment: run the compensation
+                        # executable — the segment minus the probe value
+                        # and everything only it needed — mirroring what
+                        # the interpreter computes after the same hit
+                        self._run_compensation(seg, seg_key, fmts, args,
+                                               rest, last.out_id, jcache,
+                                               values)
+                    self._free(values, seg.frees, plan)
+                    continue
+            from .segments import build_segment_fn
+            outs = self._execute_cached(
+                seg_key, lambda: build_segment_fn(seg, fmts), args, jcache)
             self.stats.executed += len(seg.instructions)
-            self.stats.exec_time += dt
             for uid, val in zip(seg.output_uids, outs, strict=True):
                 values[uid] = val
+            if lhash is not None:
+                # same estimated cost as the interpreter stores (see
+                # _run_instructions) — keeps eviction mode-identical
+                self.cache.put(lhash, values[last.out_id],
+                               last.est_cost_s, gated=False)
             self._free(values, seg.frees, plan)
+
+    # ------------------------------------------------------------------
+    def _execute_cached(self, seg_key: str, build_fn, args, jcache):
+        """Run one executable through the jit cache (lookup, compile on
+        miss, execute, sync), accounting trace/exec time."""
+        key, exe = jcache.lookup(seg_key, args)
+        if exe is None:
+            exe, dt_trace = jcache.compile(key, build_fn(), args)
+            self.stats.trace_time += dt_trace
+        else:
+            self.stats.jit_cache_hits += 1
+        t0 = time.perf_counter()
+        outs = exe(*args)
+        for o in outs:
+            backend.block_ready(o)
+        self.stats.exec_time += time.perf_counter() - t0
+        return outs
+
+    # ------------------------------------------------------------------
+    def _run_compensation(self, seg, seg_key: str, fmts: dict, args,
+                          rest: tuple, probe_uid: int, jcache,
+                          values: dict[int, Any]) -> None:
+        """Execute a probe-hit segment's remaining outputs (the segment
+        with the cached value dead-code eliminated); see
+        `segments.build_segment_fn(drop_output=...)`."""
+        from .segments import build_segment_fn
+        outs = self._execute_cached(
+            f"{seg_key}|comp",
+            lambda: build_segment_fn(seg, fmts, drop_output=probe_uid),
+            args, jcache)
+        # interpreter-equivalent accounting: it would execute every
+        # instruction except the one reused (DCE may drop more)
+        self.stats.executed += len(seg.instructions) - 1
+        for uid, val in zip(rest, outs, strict=True):
+            values[uid] = val
 
     @staticmethod
     def _free(values: dict[int, Any], uids: tuple[int, ...], plan: Plan):
         for uid in uids:
             values.pop(uid, None)
+
+
+def _coerce_format(value: Any, fmt: str) -> Any:
+    """Align a reuse-cache hit with the plan's assigned physical format.
+
+    Lineage hashes identify *values*, not representations: a cache
+    shared across runtimes (or sparse_inputs settings) can return a
+    dense array where this plan assigned BCOO, or vice versa. Sparse
+    kernels have no dense guard, so convert at the boundary.
+    """
+    if fmt == backend.BCOO and not backend.is_sparse(value):
+        return backend.sparsify(np.asarray(value))
+    if fmt == backend.DENSE and backend.is_sparse(value):
+        return value.todense()
+    return value
 
 
 # ---------------------------------------------------------------------------
@@ -226,12 +324,20 @@ class PreparedScript:
     def __init__(self, fn: Callable[..., Any],
                  arg_shapes: Sequence[tuple[int, ...]],
                  arg_dtypes: Optional[Sequence[Any]] = None,
-                 runtime: Optional[LineageRuntime] = None):
+                 runtime: Optional[LineageRuntime] = None,
+                 arg_sparsities: Optional[Sequence[float]] = None):
+        # arg_sparsities: declared density per argument (JMLC-style
+        # metadata). The placeholder leaves are zeros, so without a
+        # declaration the format-assignment pass would estimate every
+        # leaf as empty and pin it to BCOO; default to dense (1.0) and
+        # let callers declare what they will actually bind.
         self.runtime = runtime or get_runtime()
         dtypes = arg_dtypes or [np.float64] * len(arg_shapes)
+        sps = arg_sparsities or [1.0] * len(arg_shapes)
         self._leaves = [
-            input_tensor(f"arg{i}", np.zeros(s, dtype=d))
-            for i, (s, d) in enumerate(zip(arg_shapes, dtypes))]
+            input_tensor(f"arg{i}", np.zeros(s, dtype=d), sparsity=sp)
+            for i, (s, d, sp) in enumerate(
+                zip(arg_shapes, dtypes, sps, strict=True))]
         outs = fn(*self._leaves)
         if isinstance(outs, LTensor):
             outs = [outs]
@@ -248,7 +354,6 @@ class PreparedScript:
         # cost a hash pass per input — only lineage consumers (a reuse
         # cache) need them
         need_lineage = self.runtime.cache is not None
-        from .dag import _fingerprint
         for leaf, arr in zip(self._leaves, arrays):
             arr = np.asarray(arr)
             leaf_values[leaf.node.uid] = arr

@@ -9,10 +9,13 @@ fuses the whole segment and replay skips per-op dispatch entirely.
 
 Segment boundaries are forced by:
 
-  * reuse-probe points — with an active `ReuseCache` every cacheable
-    intermediate must remain observable so lineage reuse stays sound;
-    since cacheability depends on measured cost, segmentation degenerates
-    to one instruction per segment (each probe point is a boundary)
+  * reuse-probe points — with an active `ReuseCache`, instructions whose
+    compile-time cost estimate clears the cache's worth-keeping
+    threshold (`Instruction.probe`, see `repro.core.costmodel`) end
+    their segment so the probed value stays observable; everything
+    between probes fuses, so HPO/CV loops run multi-instruction
+    segments with reuse hit behaviour identical to the per-instruction
+    interpreter (which gates its probes on the same flag)
   * execution-target changes — heavy `local` and `distributed`
     instructions never share a segment (scalar generators are
     target-neutral and join either side)
@@ -94,7 +97,9 @@ def segment_plan(plan: "Plan", reuse_active: bool) -> list[Segment]:
         neutral = _target_neutral(ins)
         start_new = (
             not groups
-            or reuse_active  # every intermediate is a reuse-probe point
+            # a probe point must be segment-final so its value is
+            # observable for cache probe/put: break after it
+            or (reuse_active and groups[-1][-1].probe)
             or groups[-1][-1].node.op in backend.NON_TRACEABLE_OPS
             or ins.node.op in backend.NON_TRACEABLE_OPS
             or (not neutral and cur_target is not None
@@ -158,17 +163,43 @@ def segment_plan(plan: "Plan", reuse_active: bool) -> list[Segment]:
     return segments
 
 
-def build_segment_fn(seg: Segment):
+def build_segment_fn(seg: Segment, formats: Optional[dict] = None,
+                     drop_output: Optional[int] = None):
     """Lower a segment to one pure closure over the kernel registry.
 
     The result takes the segment's external inputs positionally (order of
     `seg.input_uids`) and returns the tuple of `seg.output_uids` values.
-    It is jit-traceable whenever every kernel in the segment is.
+    Kernel variants are selected from the compile-time format assignment
+    (`formats`: uid -> 'dense'|'bcoo'); BCOO values flow through the
+    trace as pytrees, so the closure is jit-traceable whenever every
+    kernel in the segment is.
+
+    `drop_output` builds the *compensation* variant used on a reuse-cache
+    hit in a multi-output segment: the given uid (the probe-final value,
+    served from the cache) is removed from the outputs and every
+    instruction not needed for the remaining ones is dead-code
+    eliminated — the closure computes exactly what the per-instruction
+    interpreter would after the same hit.
     """
-    steps = [(ins.out_id, ins.input_ids, backend.kernel_for_node(ins.node))
-             for ins in seg.instructions]
+    fmts = formats or {}
+    out_uids = tuple(u for u in seg.output_uids if u != drop_output)
+    instructions = seg.instructions
+    if drop_output is not None:
+        needed = set(out_uids)
+        keep = []
+        for ins in reversed(seg.instructions):
+            if ins.out_id in needed:
+                keep.append(ins)
+                needed.update(ins.input_ids)
+        instructions = keep[::-1]
+    steps = [(ins.out_id, ins.input_ids,
+              backend.kernel_for_node(
+                  ins.node,
+                  in_fmts=tuple(fmts.get(u, backend.DENSE)
+                                for u in ins.input_ids),
+                  out_fmt=fmts.get(ins.out_id, backend.DENSE)))
+             for ins in instructions]
     in_pos = {uid: i for i, uid in enumerate(seg.input_uids)}
-    out_uids = seg.output_uids
 
     def run(*args):
         env: dict[int, object] = {}

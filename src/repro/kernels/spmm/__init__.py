@@ -1,0 +1,2 @@
+"""Block-sparse SpMM/gram Pallas kernels (the `bcoo` format's backend)."""
+from . import kernel, ops, ref  # noqa: F401

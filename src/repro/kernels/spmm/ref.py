@@ -1,0 +1,24 @@
+"""Reference implementations for the block-sparse SpMM kernel family."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def block_mask(x: np.ndarray, bm: int, bn: int) -> np.ndarray:
+    """int32 per-block nonzero counts of a (padded) dense matrix."""
+    m, n = x.shape
+    assert m % bm == 0 and n % bn == 0, (x.shape, bm, bn)
+    blocks = np.asarray(x).reshape(m // bm, bm, n // bn, bn)
+    return np.count_nonzero(blocks, axis=(1, 3)).astype(np.int32)
+
+
+def gram(x: np.ndarray) -> np.ndarray:
+    return np.asarray(x).T @ np.asarray(x)
+
+
+def spmm(x: np.ndarray, w: np.ndarray) -> np.ndarray:
+    return np.asarray(x) @ np.asarray(w)
+
+
+def xtv(x: np.ndarray, v: np.ndarray) -> np.ndarray:
+    return np.asarray(x).T @ np.asarray(v)

@@ -36,15 +36,36 @@ class TestSegmentation:
         assert len(segs) < len(plan.instructions)
         assert any(s.fused for s in segs)
 
-    def test_reuse_active_segments_are_single_instruction(self, rng):
+    def test_reuse_active_segments_break_at_probe_points(self, rng):
         x = input_tensor("X", rng.normal(size=(60, 8)))
         y = input_tensor("y", rng.normal(size=(60, 1)))
         plan = compile_plan([_ridge(x, y)], reuse_enabled=True)
         segs = plan.segments_for(True)
-        assert len(segs) == len(plan.instructions)
-        assert all(len(s.instructions) == 1 for s in segs)
-        # every intermediate observable: each has exactly one output
-        assert all(len(s.output_uids) == 1 for s in segs)
+        # cost-gated probing: segments stay maximal between probe
+        # points instead of degenerating to one instruction each
+        assert sum(len(s.instructions) for s in segs) == \
+            len(plan.instructions)
+        assert len(segs) < len(plan.instructions)
+        assert any(s.fused for s in segs)
+        # heavy ops are probe points; trivial generators are not
+        probes = {ins.node.op for ins in plan.instructions if ins.probe}
+        assert {"gram", "xtv", "solve"} <= probes
+        assert "literal" not in probes and "eye" not in probes
+        for s in segs:
+            for pos, ins in enumerate(s.instructions):
+                if ins.probe:
+                    # a probe is always segment-final and observable
+                    assert pos == len(s.instructions) - 1
+                    assert ins.out_id in s.output_uids
+
+    def test_reuse_probe_annotated_in_explain(self, rng):
+        x = input_tensor("X", rng.normal(size=(60, 8)))
+        y = input_tensor("y", rng.normal(size=(60, 1)))
+        plan = compile_plan([_ridge(x, y)], reuse_enabled=True)
+        txt = plan.explain(reuse_active=True)
+        assert "[reuse-probe]" in txt
+        # without a cache the marker disappears
+        assert "[reuse-probe]" not in plan.explain(reuse_active=False)
 
     def test_target_change_breaks_segment(self, rng):
         x = input_tensor("X", rng.normal(size=(64, 64)))
@@ -154,6 +175,41 @@ class TestParity:
             hits[fuse] = (rt.cache.stats.probes, rt.cache.stats.hits)
             assert rt.cache.stats.hits >= 4  # gram+xtv reused per extra lam
         assert hits[True] == hits[False]
+
+    def test_multi_output_probe_segment_compensation(self, rng):
+        # in the ridge plan xtv's segment also exports the add result;
+        # a cache hit on xtv must still produce the add value (the
+        # compensation executable re-runs the segment minus the cached
+        # op), count as reused, and match the uncached answer
+        xn = rng.normal(size=(200, 16))
+        yn = rng.normal(size=(200, 1))
+        x, y = input_tensor("X", xn), input_tensor("y", yn)
+        rt = LineageRuntime(cache=ReuseCache(), fuse=True)
+        rt.evaluate([_ridge(x, y, 0.1)])
+        reused0 = rt.stats.reused
+        out = rt.evaluate([_ridge(x, y, 0.5)])[0]  # gram + xtv hit
+        assert rt.stats.reused >= reused0 + 2
+        ref = np.linalg.solve(xn.T @ xn + 0.5 * np.eye(16), xn.T @ yn)
+        np.testing.assert_allclose(out, ref, rtol=1e-8, atol=1e-10)
+
+    def test_reuse_hits_match_under_eviction_pressure(self, rng):
+        # entry costs are the compile-time estimates in both modes, so
+        # eviction ordering — and therefore hits — cannot diverge even
+        # when the pool churns
+        xs = [rng.normal(size=(200, 32)) for _ in range(6)]
+        stats = {}
+        for fuse in (True, False):
+            rt = LineageRuntime(cache=ReuseCache(budget_bytes=1 << 14),
+                                fuse=fuse)
+            tensors = [input_tensor(f"E{i}", x)
+                       for i, x in enumerate(xs)]
+            for t in tensors + tensors:
+                rt.evaluate([ops.gram(t)])
+            stats[fuse] = (rt.cache.stats.probes, rt.cache.stats.hits,
+                           rt.cache.stats.misses,
+                           rt.cache.stats.evictions)
+        assert stats[True] == stats[False]
+        assert stats[True][3] > 0  # evictions actually happened
 
     def test_prepared_script_parity(self, rng):
         def fn(a, b):
