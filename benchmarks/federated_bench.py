@@ -1,13 +1,38 @@
-"""Example 2 (§4.3): federated MV/VM/gram — bytes exchanged vs
-centralizing the data, plus federated lmDS end-to-end."""
+"""Federated execution benchmark (§4.3 Example 2 + ISSUE 4).
+
+Two layers:
+
+  * the original eager-instruction measurements (`ex2_fed_*`): bytes
+    exchanged by fed MV/VM/gram vs centralizing the data;
+  * the compiler-placement comparison (`fed_compiled_vs_eager`): a
+    warm repeated federated lmDS solve — an HPO-style lambda grid run
+    twice — executed (a) through the DAG -> placement pass ->
+    fused-segment stack with a lineage `ReuseCache` (per-site work
+    compiled once into warm jit executables; `fed_gram`/`fed_xtv`
+    reused across the grid, so sites are touched once) vs (b) the
+    eager-numpy `federated_lmds` island, which recomputes every
+    per-site gram/xtv on every call. Exchange bytes are asserted to
+    match the oracle exactly on the first solve and reported per site.
+
+Appends a trajectory entry to ``benchmarks/BENCH_federated.json``.
+"""
 from __future__ import annotations
+
+import json
+import os
+import time
 
 import numpy as np
 
 from .common import COLS, ROWS, emit, timed
 
+BENCH_JSON = os.path.join(os.path.dirname(__file__), "BENCH_federated.json")
 
-def main(rows=ROWS, cols=COLS, n_sites=4) -> None:
+LAMBDAS = (0.01, 0.1, 1.0, 10.0, 100.0)
+
+
+def _eager_exchange(rows=ROWS, cols=COLS, n_sites=4) -> None:
+    """The original §4.3 Example 2 numbers (eager instructions)."""
     from repro.core.federated import FederatedTensor, federated_lmds
     from repro.data.synthetic import gen_regression
     x, y, _ = gen_regression(rows, cols, seed=13)
@@ -37,5 +62,112 @@ def main(rows=ROWS, cols=COLS, n_sites=4) -> None:
     emit("ex2_federated_lmds", t, f"max_err_vs_centralized={err:.2e}")
 
 
+def _grid_compiled(x, y, n_sites, reuse: bool = True):
+    """Compiled federated HPO grid: plans precompiled, runtime with a
+    reuse cache — fed_gram/fed_xtv computed once, warm jit replay."""
+    from repro.core import (FederatedTensor, LineageRuntime, ReuseCache,
+                            federated_input, input_tensor, ops)
+    from repro.core.compiler import compile_plan
+    fed = FederatedTensor.partition_rows(x, n_sites)
+    X, Y = federated_input("benchX", fed), input_tensor("benchy", y)
+    n = x.shape[1]
+    rt = LineageRuntime(cache=ReuseCache() if reuse else None)
+    plans = [compile_plan(
+        [ops.solve(ops.gram(X) + lam * ops.eye(n), ops.xtv(X, Y))],
+        reuse_enabled=reuse) for lam in LAMBDAS]
+
+    def solve_grid():
+        return [rt.run_plan(p)[0] for p in plans]
+
+    return rt, solve_grid
+
+
+def _grid_eager(x, y, n_sites):
+    from repro.core.federated import FederatedTensor, federated_lmds
+    fed = FederatedTensor.partition_rows(x, n_sites)
+
+    def solve_grid():
+        return [federated_lmds(fed, y, reg=lam) for lam in LAMBDAS]
+
+    return fed, solve_grid
+
+
+def main(rows: int = 8192, cols: int = 128, n_sites: int = 4,
+         repeats: int = 5, eager_layer: bool = True) -> dict:
+    if eager_layer:
+        _eager_exchange(n_sites=n_sites)
+
+    rng = np.random.default_rng(7)
+    x = rng.normal(size=(rows, cols))
+    y = x @ rng.normal(size=(cols, 1)) + 0.01 * rng.normal(size=(rows, 1))
+
+    rt, compiled = _grid_compiled(x, y, n_sites)
+    fed_eager, eager = _grid_eager(x, y, n_sites)
+
+    out_c = compiled()     # warm-up: trace/compile + populate reuse cache
+    out_e = eager()
+    parity = max(float(np.abs(a - b).max()) for a, b in zip(out_c, out_e))
+    if parity >= 1e-8:  # a real gate, not an assert: CI may run with -O
+        raise RuntimeError(
+            f"compiled vs eager federated diverge (max abs err {parity})")
+
+    # exchange-byte parity on the first (cold) grid pass: the compiled
+    # plan moved exactly what the eager oracle moves for ONE solve —
+    # fed_gram/fed_xtv were lineage-reused across the other lambdas
+    one = fed_eager.log.total // len(LAMBDAS)
+    ex = rt.stats.exchange
+    if ex.total != one:
+        raise RuntimeError(
+            f"exchange bytes diverge from the eager oracle: compiled "
+            f"moved {ex.total}, one eager solve moves {one}")
+
+    t_compiled = timed(compiled, repeats=repeats)
+    t_eager = timed(eager, repeats=repeats)
+    speedup = t_eager / max(t_compiled, 1e-12)
+    emit("fed_compiled_vs_eager", t_compiled,
+         f"eager_us={t_eager*1e6:.1f};speedup={speedup:.2f}x;"
+         f"exchange_per_site={dict(sorted(ex.per_site.items()))}")
+
+    # transparency: the same compiled grid without a reuse cache —
+    # measures pure warm-jit federated execution (per-site XLA kernels
+    # vs numpy BLAS; on CPU the f64 gemm gap means reuse, not raw
+    # kernel speed, is what wins the repeated-solve scenario)
+    _, compiled_nr = _grid_compiled(x, y, n_sites, reuse=False)
+    compiled_nr()  # warm the jit cache
+    t_noreuse = timed(compiled_nr, repeats=repeats)
+
+    entry = dict(
+        benchmark="fed_compiled_vs_eager",
+        workload=f"federated_lmDS_grid({rows}x{cols}, {n_sites} sites, "
+                 f"{len(LAMBDAS)} lambdas, warm)",
+        compiled_us_per_grid=round(t_compiled * 1e6, 1),
+        compiled_noreuse_us_per_grid=round(t_noreuse * 1e6, 1),
+        eager_numpy_us_per_grid=round(t_eager * 1e6, 1),
+        speedup_compiled_vs_eager=round(speedup, 2),
+        parity_max_abs_err=parity,
+        exchange_bytes_total=ex.total,
+        exchange_bytes_per_site={int(k): int(v)
+                                 for k, v in sorted(ex.per_site.items())},
+        exchange_matches_eager_single_solve=True,
+        reuse=rt.cache.stats.as_dict(),
+        runtime=rt.stats.as_dict(),
+        ts=time.strftime("%Y-%m-%dT%H:%M:%S"),
+    )
+    trajectory = []
+    if os.path.exists(BENCH_JSON):
+        try:
+            with open(BENCH_JSON) as f:
+                trajectory = json.load(f)
+        except Exception:
+            trajectory = []
+    trajectory.append(entry)
+    with open(BENCH_JSON, "w") as f:
+        json.dump(trajectory, f, indent=2)
+    return entry
+
+
 if __name__ == "__main__":
-    main()
+    import sys
+    sys.path.insert(0, "src")
+    print("name,us_per_call,derived")
+    print(json.dumps(main(), indent=2))

@@ -6,6 +6,10 @@ Prints ``name,us_per_call,derived`` CSV lines.
   fig5c/fig5d_*         — Fig. 5(c,d) + Fig. 6: lineage reuse speedups
   fig7_cv_*             — Fig. 7: cross-validation partial reuse
   ex2_fed_*             — §4.3 Example 2: federated MV/VM/gram + lmDS
+  fed_compiled_vs_eager — ISSUE 4: federated plans through the compiler
+                          (placement pass + per-site fused segments +
+                          lineage reuse) vs the eager-numpy federated
+                          island (BENCH_federated.json)
   gram_*                — §5.2 kernel trio (dense XLA / BLAS / sparse)
   roofline_*            — §Roofline cells from the dry-run sweep
   fused_vs_interpreted  — ISSUE 1: segment JIT engine vs per-op interpreter
@@ -16,7 +20,8 @@ Prints ``name,us_per_call,derived`` CSV lines.
 Every run ends with a summary table aggregating the latest entry of all
 ``BENCH_*.json`` trajectories.
 
-``--smoke`` runs the fusion + sparse benchmarks at reduced sizes (CI).
+``--smoke`` runs the fusion + sparse + federated benchmarks at reduced
+sizes (CI).
 """
 import glob
 import json
@@ -67,10 +72,14 @@ def aggregate() -> None:
 
 def main() -> None:
     if "--smoke" in sys.argv:
-        from benchmarks import fusion_bench, sparse_bench
+        from benchmarks import federated_bench, fusion_bench, sparse_bench
         print("name,us_per_call,derived")
         fusion_bench.main(rows=500, cols=32, calls=20, repeats=2)
         sparse_bench.main(rows=512, cols=64, calls=10, repeats=2)
+        # large enough that per-site gram dominates the eager baseline
+        # (at toy sizes fixed plan/probe overhead hides the reuse win)
+        federated_bench.main(rows=4096, cols=96, n_sites=3, repeats=3,
+                             eager_layer=False)
         aggregate()
         return
     from benchmarks import (cv_reuse, federated_bench, fusion_bench,

@@ -10,6 +10,8 @@ _jax.config.update("jax_enable_x64", True)
 from . import ops  # noqa: F401,E402
 from .compiler import Plan, compile_plan  # noqa: F401
 from .dag import LTensor, input_tensor  # noqa: F401
+from .federated import (FederatedTensor, LocalSite,  # noqa: F401
+                        federated_input)
 from .jit_cache import clear_jit_cache, get_jit_cache  # noqa: F401
 from .reuse import ReuseCache  # noqa: F401
 from .runtime import (LineageRuntime, PreparedScript, evaluate,  # noqa: F401

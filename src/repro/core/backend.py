@@ -145,7 +145,12 @@ ZERO_PRESERVING_UNARY = frozenset(_ZERO_PRESERVING_FNS)
 
 
 def leaf_format(node: Node) -> str:
-    """Physical format for an input leaf, from propagated estimates."""
+    """Physical format for an input leaf, from propagated estimates.
+
+    Federated leaves are bound to `FederatedTensor` metadata objects,
+    not arrays — they never take a local physical format."""
+    if node.placement != "local":
+        return DENSE
     if (HAS_SPARSE and len(node.shape) == 2
             and node.sparsity < SPARSE_THRESHOLD
             and node.numel >= SPARSE_MIN_NUMEL):
@@ -283,11 +288,32 @@ _KERNEL_BUILDERS: dict[str, Any] = {}
 _SPARSE_KERNEL_BUILDERS: dict[tuple[str, tuple[str, ...]],
                               tuple[Any, str]] = {}
 
+# Federated instructions (SystemDS §3.3): generated by the compiler's
+# placement pass (`repro.core.compiler.lower_federated`), executed by the
+# runtime's federated executor — per-site local work runs as compiled
+# sub-segments through `LocalSite.execute`, only aggregates cross the
+# exchange boundary. They have no entry in the kernel registry: the
+# master-side orchestration (site loop + exchange metering) is host
+# python, so they are non-traceable by construction.
+FED_OPS: frozenset[str] = frozenset({
+    "fed_gram", "fed_xtv", "fed_mv", "fed_vm", "fed_colsums", "fed_map",
+})
+# `collect` is the explicit, cost-modeled federation boundary: it
+# materializes a federated value at the master (full partition bytes
+# exchanged) so non-lowerable consumers can run locally.
+COLLECT_OP = "collect"
+
 # Ops that must never be traced into a fused jit segment (data-dependent
-# python control flow, host side effects, dynamic output shapes). All
-# current kernels are traceable; the segmenter breaks segments here so
-# future ops can opt out of fusion by name.
-NON_TRACEABLE_OPS: frozenset[str] = frozenset()
+# python control flow, host side effects, dynamic output shapes). The
+# segmenter isolates them into single-instruction segments which the
+# runtime executes eagerly (host path), outside any jit trace:
+#   * fed_* / collect — host-side site orchestration + exchange metering
+#   * quantile — sort-based order statistics on the host (numpy
+#     nanquantile), the control-program analogue of SystemDS's
+#     sort-based quantiles; as a DAG node it stays inside the lineage
+#     scope, so downstream reuse sees it (unlike an evaluate() round
+#     trip that severs lineage mid-pipeline)
+NON_TRACEABLE_OPS: frozenset[str] = FED_OPS | {COLLECT_OP, "quantile"}
 
 
 def register_kernel(op: str):
@@ -479,6 +505,20 @@ def _build_replace_nan(attrs):
 @register_kernel("cumsum")
 def _build_cumsum(attrs):
     return lambda x: jnp.cumsum(densify(x), axis=0)
+
+
+@register_kernel("quantile")
+def _build_quantile(attrs):
+    """Host op (in NON_TRACEABLE_OPS): per-column nan-aware quantile via
+    numpy's sort-based implementation — must only run on concrete
+    values, which the segmenter guarantees by isolating it."""
+    q = attrs["q"]
+
+    def run(x):
+        arr = np.asarray(densify(x), dtype=np.float64)
+        return jnp.asarray(
+            np.nanquantile(arr, q, axis=0, keepdims=True))
+    return run
 
 
 @register_kernel("literal")

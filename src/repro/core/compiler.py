@@ -3,11 +3,13 @@
 Mirrors SystemDS's compilation chain at our scale: rewrites + size
 propagation happen on the DAG (shapes/sparsity are attached at
 construction), memory estimates pick an execution target per instruction
-(local vs distributed — the analogue of CP vs Spark instructions), and
-the result is a topologically ordered instruction sequence executed by
-`repro.core.runtime.LineageRuntime`.
+(local vs distributed — the analogue of CP vs Spark instructions; plans
+over `federated_input` leaves additionally get `federated`-target
+`fed_*` instructions from the placement pass, see `lower_federated`),
+and the result is a topologically ordered instruction sequence executed
+by `repro.core.runtime.LineageRuntime`.
 
-Two compile-time physical decisions ride on the propagated estimates:
+Three compile-time physical decisions ride on the propagated estimates:
 
   * format assignment (`assign_formats` / `Plan.formats_for`) — every
     value is pinned to `dense` or `bcoo` from its sparsity estimate, so
@@ -15,7 +17,13 @@ Two compile-time physical decisions ride on the propagated estimates:
   * probe-point selection (`Instruction.probe`) — only intermediates
     whose estimated cost clears the reuse cache's worth-keeping
     threshold become lineage-reuse probe points; segments stay maximal
-    between probes instead of degenerating to one op per segment.
+    between probes instead of degenerating to one op per segment;
+  * placement assignment (`lower_federated`) — placement propagates from
+    federated input leaves; eligible patterns (gram, xtv, mv, vm,
+    colSums/colMeans, row-preserving elementwise/structural ops) lower
+    to `fed_*` instructions when the exchange-aware cost model says
+    federation beats collecting, with explicit `collect` boundaries
+    otherwise.
 """
 from __future__ import annotations
 
@@ -23,7 +31,8 @@ from dataclasses import dataclass, field
 from typing import Optional
 
 from . import costmodel
-from .dag import LTensor, Node
+from .dag import (ELEMENTWISE_BINARY, ELEMENTWISE_UNARY, LTensor, Node,
+                  make_node)
 from .rewrites import run_rewrites
 
 # Default per-operation local memory budget: inputs+output of an op above
@@ -37,7 +46,7 @@ class Instruction:
     node: Node
     out_id: int
     input_ids: tuple[int, ...]
-    target: str  # 'local' | 'distributed'
+    target: str  # 'local' | 'distributed' | 'federated'
     last_use_of: tuple[int, ...] = ()  # uids freed after this instruction
     probe: bool = False   # lineage-reuse probe point (cost-gated)
     est_cost_s: float = 0.0  # compile-time cost estimate behind `probe`
@@ -96,14 +105,22 @@ class Plan:
                   fmts: Optional[dict] = None) -> str:
         fmts = fmts or {}
 
-        def ref(uid: int) -> str:
+        def ref(uid: int, node: Optional[Node] = None) -> str:
+            if node is not None and node.placement == "federated":
+                return f"%{uid}:fed"  # value lives row-partitioned on sites
             f = fmts.get(uid, "dense")
             return f"%{uid}" if f == "dense" else f"%{uid}:{f}"
 
-        args = ",".join(ref(i) for i in ins.input_ids)
-        attrs = {k: v for k, v in ins.node.attrs if k != "index"}
+        args = ",".join(ref(u, nd)
+                        for u, nd in zip(ins.input_ids, ins.node.inputs))
+        attrs = {k: v for k, v in ins.node.attrs
+                 if k not in ("index", "iattrs")}
         fmt = fmts.get(ins.out_id, "dense")
         tags = f" fmt={fmt}" if fmt != "dense" else ""
+        if ins.node.placement == "federated":
+            tags += " fed"
+        if ins.node.op == "collect":
+            tags += " [collect-boundary]"
         if reuse_active and ins.probe:
             tags += " [reuse-probe]"
         return (f"%{ins.out_id} = [{ins.target[0].upper()}] "
@@ -176,6 +193,193 @@ def assign_formats(plan: "Plan", sparse: bool) -> dict[int, str]:
     return fmt
 
 
+# ---------------------------------------------------------------------------
+# Placement assignment (SystemDS §3.3/§4.3): federated as a compiler
+# placement alongside local | distributed
+# ---------------------------------------------------------------------------
+
+# Elementwise / structural HOPs whose output keeps the row partitioning
+# of their federated operand(s): they lower to `fed_map` (per-site
+# execution, no aggregate exchange). `slice` qualifies only for full-row
+# column slices; `cbind` only along axis 1 with row-aligned operands.
+_FED_MAP_OPS = (ELEMENTWISE_BINARY | ELEMENTWISE_UNARY
+                | {"replace_nan", "where", "slice", "cbind"})
+
+
+def _site_count(n: Node, nsites: dict[int, int]) -> int:
+    return int(nsites.get(n.uid, n.attr("n_sites", 1) or 1))
+
+
+def lower_federated(roots: list[Node]) -> list[Node]:
+    """Placement-assignment pass: propagate `placement='federated'` from
+    federated input leaves over the DAG and lower eligible patterns into
+    `fed_*` instructions; insert explicit, cost-modeled `collect`
+    boundaries everywhere else.
+
+    Runs after the algebraic rewrites — so `t(X) @ X` over a federated X
+    has already been fused to `gram(X)` and lowers to `fed_gram`, the
+    paper's Example 2 (fed instructions are *generated by the
+    optimizer*, never hand-written). Each candidate lowering is gated by
+    the cost model: the federated form (per-site compute + aggregate
+    exchange) must beat collecting the operand and running locally
+    (`costmodel.fed_cost_s` vs `costmodel.collect_cost_s`), so placement
+    decisions are cost-based, not syntactic. A `collect` inserted for
+    one consumer is shared by all of them.
+    """
+    # fast path: no federated leaves anywhere -> nothing to do
+    seen: set[int] = set()
+    stack = list(roots)
+    has_fed = False
+    while stack and not has_fed:
+        n = stack.pop()
+        if n.uid in seen:
+            continue
+        seen.add(n.uid)
+        has_fed = n.placement == "federated"
+        stack.extend(n.inputs)
+    if not has_fed:
+        return roots
+
+    memo: dict[int, Node] = {}
+    nsites: dict[int, int] = {}     # uid of federated value -> site count
+    collected: dict[int, Node] = {}  # shared collect boundaries
+
+    def is_fed(x: Node) -> bool:
+        return x.placement == "federated"
+
+    def collect_of(x: Node) -> Node:
+        got = collected.get(x.uid)
+        if got is None:
+            got = make_node("collect", (x,), x.shape, x.dtype, x.sparsity,
+                            n_sites=_site_count(x, nsites))
+            collected[x.uid] = got
+        return got
+
+    def shared_sites(fed_inputs: list[Node]) -> Optional[int]:
+        counts = {_site_count(x, nsites) for x in fed_inputs}
+        return counts.pop() if len(counts) == 1 else None
+
+    def try_lower(n: Node, ins: tuple[Node, ...]
+                  ) -> Optional[tuple[Node, Node]]:
+        """Return (replacement node, fed core used for the cost gate),
+        or None when no federated lowering exists for this pattern."""
+        op = n.op
+        feds = [x for x in ins if is_fed(x)]
+        sites = shared_sites(feds)
+        if sites is None:  # partitionings disagree -> no joint lowering
+            return None
+        if op == "gram" and is_fed(ins[0]):
+            core = make_node("fed_gram", ins, n.shape, n.dtype, n.sparsity,
+                             n_sites=sites)
+            return core, core
+        if op == "xtv":
+            fed_args = tuple(i for i, x in enumerate(ins) if is_fed(x))
+            # v^T X (the vm pattern) when only the second operand is
+            # federated; X^T v (xtv) otherwise — one runtime executor,
+            # two instruction names so EXPLAIN reads like the paper's
+            fed_op = "fed_vm" if fed_args == (1,) else "fed_xtv"
+            core = make_node(fed_op, ins, n.shape, n.dtype, n.sparsity,
+                             n_sites=sites, fed_args=fed_args)
+            return core, core
+        if op == "matmul" and is_fed(ins[0]) and not is_fed(ins[1]):
+            core = make_node("fed_mv", ins, n.shape, n.dtype, n.sparsity,
+                             n_sites=sites)
+            return core, core
+        if op in ("colSums", "colMeans") and is_fed(ins[0]):
+            cs = make_node("fed_colsums", ins, (1, n.shape[-1]), n.dtype,
+                           1.0, n_sites=sites)
+            if op == "colSums":
+                return cs, cs
+            inv_m = make_node("literal", (), (), n.dtype, 1.0,
+                              value=1.0 / ins[0].shape[0])
+            return (make_node("mul", (cs, inv_m), n.shape, n.dtype, 1.0),
+                    cs)
+        if op in _FED_MAP_OPS:
+            return _lower_fed_map(n, ins, sites)
+        return None
+
+    def _lower_fed_map(n: Node, ins: tuple[Node, ...], sites: int
+                       ) -> Optional[tuple[Node, Node]]:
+        m = next(x for x in ins if is_fed(x)).shape[0]
+        if len(n.shape) != 2 or n.shape[0] != m:
+            return None  # output must keep the row partitioning
+        if n.op == "slice":
+            idx = n.attr("index")
+            if not idx or idx[0] != (0, m, 0):
+                return None  # only full-row column slices stay federated
+        if n.op == "cbind" and n.attr("axis") != 1:
+            return None
+        new_inputs: list[Node] = []
+        fed_args: list[int] = []
+        gen_args: list[tuple[int, float, int, str]] = []
+        for pos, x in enumerate(ins):
+            if is_fed(x):
+                fed_args.append(pos)
+                new_inputs.append(x)
+            elif x.op == "full" and len(x.shape) == 2 and x.shape[0] == m:
+                # row-aligned generator: produced per-site, never sent
+                # (matches the eager intercept idiom of appending a ones
+                # column at each site); dtype travels along so an f32
+                # plan is not silently promoted by an f64 default
+                gen_args.append((pos, float(x.attr("value")), x.shape[1],
+                                 str(x.dtype)))
+            elif x.shape == () or (len(x.shape) == 2
+                                   and x.shape[0] in (1, m)):
+                new_inputs.append(x)  # scalar / broadcast row / aligned
+            else:
+                return None
+        iattrs = tuple(kv for kv in n.attrs)
+        core = make_node("fed_map", tuple(new_inputs), n.shape, n.dtype,
+                         n.sparsity, placement="federated", inner=n.op,
+                         iattrs=iattrs, n_args=len(ins),
+                         n_sites=sites, fed_args=tuple(fed_args),
+                         gen_args=tuple(gen_args))
+        return core, core
+
+    def rec(n: Node) -> Node:
+        got = memo.get(n.uid)
+        if got is not None:
+            return got
+        if not n.inputs:
+            if is_fed(n):
+                nsites[n.uid] = _site_count(n, nsites)
+            memo[n.uid] = n
+            return n
+        ins = tuple(rec(i) for i in n.inputs)
+        fed_inputs = [x for x in ins if is_fed(x)]
+        if not fed_inputs:
+            if all(a is b for a, b in zip(ins, n.inputs)):
+                out = n
+            else:
+                out = Node(op=n.op, inputs=ins, attrs=n.attrs, shape=n.shape,
+                           dtype=n.dtype, sparsity=n.sparsity)
+            memo[n.uid] = out
+            return out
+        cand = try_lower(n, ins)
+        if cand is not None:
+            out, core = cand
+            # cost gate: federated execution vs collect-then-local
+            collect_s = sum(
+                0.0 if x.uid in collected else
+                costmodel.collect_cost_s(x, _site_count(x, nsites))
+                for x in fed_inputs) + costmodel.est_cost_s(n)
+            if costmodel.est_cost_s(core) <= collect_s:
+                if is_fed(out):
+                    nsites[out.uid] = _site_count(core, nsites)
+                memo[n.uid] = out
+                return out
+        # fallback: explicit collect boundary, then the op runs locally
+        loc = tuple(collect_of(x) if is_fed(x) else x for x in ins)
+        out = Node(op=n.op, inputs=loc, attrs=n.attrs, shape=n.shape,
+                   dtype=n.dtype, sparsity=n.sparsity)
+        memo[n.uid] = out
+        return out
+
+    new_roots = [rec(r) for r in roots]
+    # plan outputs must be local: materialize federated roots
+    return [collect_of(r) if is_fed(r) else r for r in new_roots]
+
+
 def topo_order(roots: list[Node]) -> list[Node]:
     seen: set[int] = set()
     order: list[Node] = []
@@ -199,6 +403,9 @@ def compile_plan(outputs: list[LTensor], *, reuse_enabled: bool = False,
     roots = [o.node for o in outputs]
     roots = run_rewrites(roots, reuse_enabled=reuse_enabled,
                          opt_level=opt_level)
+    # placement assignment runs after the rewrites so fused patterns
+    # (t(X)@X -> gram) are visible to the federated lowering
+    roots = lower_federated(roots)
     order = topo_order(roots)
 
     # liveness: last consumer of each node frees it (buffer-pool eviction)
@@ -220,7 +427,10 @@ def compile_plan(outputs: list[LTensor], *, reuse_enabled: bool = False,
         if n.op == "input":
             continue
         op_bytes = n.est_bytes() + sum(i.est_bytes() for i in n.inputs)
-        target = "distributed" if op_bytes > local_budget else "local"
+        if n.op == "collect" or n.op.startswith("fed_"):
+            target = "federated"
+        else:
+            target = "distributed" if op_bytes > local_budget else "local"
         cost = costmodel.est_cost_s(n)
         instructions.append(Instruction(
             node=n, out_id=n.uid,

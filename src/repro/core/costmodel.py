@@ -24,6 +24,8 @@ available at plan-compile time.
 """
 from __future__ import annotations
 
+import numpy as np
+
 from .dag import SPARSE_THRESHOLD, Node
 from .reuse import MIN_CACHE_COST_S
 
@@ -43,6 +45,14 @@ LIGHT_OP_BASE_S = 1e-6
 HEAVY_OPS = frozenset({
     "matmul", "gram", "xtv", "solve", "cholesky", "inv",
 })
+
+# Federated placement calibration: effective master<->site link
+# bandwidth and per-site round-trip latency. Deliberately below local
+# memory bandwidth — moving bytes across the federation boundary is the
+# dominant cost the placement pass must weigh (§3.3 "exchange
+# constraints"), so collect decisions are cost-based, not syntactic.
+NET_BW = 1e9          # bytes/s across the exchange boundary
+FED_TRIP_S = 50e-6    # per-site round-trip launch latency
 
 # An intermediate becomes a lineage-reuse probe point when its estimated
 # cost clears the cache's own worth-keeping threshold: anything cheaper
@@ -124,5 +134,90 @@ def node_bytes(n: Node) -> float:
 
 def est_cost_s(n: Node) -> float:
     """Estimated wall-clock seconds to execute one HOP standalone."""
+    if n.op == "collect" or n.op.startswith("fed_"):
+        return fed_cost_s(n)
     base = HEAVY_OP_BASE_S if n.op in HEAVY_OPS else LIGHT_OP_BASE_S
     return base + max(node_flops(n) / PEAK_FLOPS, node_bytes(n) / PEAK_BW)
+
+
+# ---------------------------------------------------------------------------
+# Federated placement costs (§3.3): exchange bytes as a first-class term
+# ---------------------------------------------------------------------------
+
+def _dense_bytes(n: Node) -> float:
+    return float(_numel(n.shape)) * np.dtype(n.dtype).itemsize
+
+
+def fed_exchange_bytes(n: Node) -> tuple[float, float]:
+    """(bytes master->sites, bytes sites->master) for one `fed_*` /
+    `collect` instruction — the compile-time estimate of what the
+    runtime's `ExchangeLog` will meter."""
+    sites = int(n.attr("n_sites", 1) or 1)
+    op = n.op
+    out_b = _dense_bytes(n)
+    if op == "collect":
+        return 0.0, _dense_bytes(n.inputs[0])
+    if op == "fed_gram":
+        return 0.0, sites * out_b
+    if op in ("fed_xtv", "fed_vm"):
+        fed_args = set(n.attr("fed_args", (0,)))
+        sent = sum(_dense_bytes(i) for pos, i in enumerate(n.inputs)
+                   if pos not in fed_args)  # row-aligned operands, sliced
+        return sent, sites * out_b
+    if op == "fed_mv":
+        w = n.inputs[1]
+        return sites * _dense_bytes(w), out_b  # broadcast w, rbind result
+    if op == "fed_colsums":
+        return 0.0, sites * out_b
+    if op == "fed_map":
+        # fed_args/gen_args index the *inner argument list*; n.inputs is
+        # that list with generated operands removed — walk the inner
+        # positions and advance through inputs exactly like the runtime
+        # executor does, so this estimate matches what ExchangeLog meters
+        fed_args = set(n.attr("fed_args", ()))
+        gens = {g[0] for g in n.attr("gen_args", ())}
+        sent = 0.0
+        inputs = iter(n.inputs)
+        for pos in range(int(n.attr("n_args", len(n.inputs)))):
+            if pos in gens:
+                continue  # generated on site — never sent
+            i = next(inputs)
+            if pos in fed_args or i.shape == ():
+                continue  # on-site already / scalar constant
+            b = _dense_bytes(i)
+            sent += sites * b if i.shape[0] == 1 else b  # broadcast : slice
+        return sent, 0.0  # output stays federated — nothing comes back
+    return 0.0, 0.0
+
+
+def _fed_flops(n: Node) -> float:
+    """Total across sites of the per-site local work."""
+    op = n.op
+    out = _numel(n.shape)
+    if op == "fed_gram":
+        return 2.0 * out * n.inputs[0].shape[0]
+    if op in ("fed_xtv", "fed_vm"):
+        m = max(i.shape[0] for i in n.inputs)
+        return 2.0 * out * m
+    if op == "fed_mv":
+        return 2.0 * out * n.inputs[0].shape[1]
+    if op in ("fed_colsums", "fed_map"):
+        return float(max((_numel(i.shape) for i in n.inputs), default=out))
+    return 0.0  # collect: pure data movement
+
+
+def fed_cost_s(n: Node) -> float:
+    """Estimated seconds for a federated instruction: per-site launch
+    round trips + exchange bytes over the federation link + the per-site
+    local compute (sites work in parallel)."""
+    sites = int(n.attr("n_sites", 1) or 1)
+    to_b, from_b = fed_exchange_bytes(n)
+    compute = _fed_flops(n) / sites / PEAK_FLOPS
+    return sites * FED_TRIP_S + (to_b + from_b) / NET_BW + compute
+
+
+def collect_cost_s(fed_value: Node, n_sites: int) -> float:
+    """Cost of materializing a federated value at the master — the
+    explicit boundary the placement pass inserts for non-lowerable
+    consumers, and the baseline every `fed_*` lowering must beat."""
+    return n_sites * FED_TRIP_S + _dense_bytes(fed_value) / NET_BW

@@ -54,6 +54,13 @@ class Node:
     shape: tuple[int, ...]
     dtype: Any
     sparsity: float  # estimated nnz / numel in [0, 1]
+    # Where the *value* lives: 'local' (master memory) or 'federated'
+    # (row-partitioned across sites, never materialized at the master).
+    # Set on federated input leaves at construction and propagated by the
+    # compiler's placement pass (`repro.core.compiler.lower_federated`);
+    # deliberately not part of the lineage hash — placement describes a
+    # physical location, not a value.
+    placement: str = "local"
     uid: int = field(default_factory=lambda: next(_counter))
 
     # -- helpers ----------------------------------------------------------
@@ -156,11 +163,12 @@ def _sp_add(a: float, b: float) -> float:
 
 
 def make_node(op: str, inputs: Sequence[Node], shape, dtype, sparsity,
-              **attrs) -> Node:
+              placement: str = "local", **attrs) -> Node:
     return Node(op=op, inputs=tuple(inputs),
                 attrs=tuple(sorted(attrs.items())),
                 shape=tuple(int(d) for d in shape), dtype=np.dtype(dtype),
-                sparsity=min(max(float(sparsity), 0.0), 1.0))
+                sparsity=min(max(float(sparsity), 0.0), 1.0),
+                placement=placement)
 
 
 # --------------------------------------------------------------------------

@@ -1,7 +1,7 @@
 """Federated tensors and federated instructions (SystemDS §3.3, §4.3).
 
 A `FederatedTensor` is a metadata object holding references to per-site
-partitions covering disjoint row (or column) ranges. Instructions push
+partitions covering disjoint row ranges. Federated instructions push
 computation to the sites and exchange only the minimal aggregates
 (paper Example 2):
 
@@ -10,59 +10,130 @@ computation to the sites and exchange only the minimal aggregates
   fed_gram : local X_i^T X_i                    -> sum (n² exchange only)
   fed_xtv  : local X_i^T y_i                    -> sum
 
-Every exchange is metered (`ExchangeLog`) — the paper's "exchange
-constraints" become an auditable byte budget per site.
+Every exchange is metered (`ExchangeLog`, with per-site byte counters) —
+the paper's "exchange constraints" become an auditable byte budget per
+site.
 
-Two backends:
-  * `LocalSite` — in-process numpy workers (this container; also the
-    unit-test oracle).
-  * the multi-pod mesh backend lives in `repro.distributed.fedavg`:
-    sites = slices along the `pod` mesh axis, instructions lower to
-    shard_map programs with psum/all_gather on that axis only.
+Two execution paths share these instruction semantics:
+
+  * the **compiler placement path** — `federated_input` creates a DAG
+    leaf with `placement='federated'`; `repro.core.compiler
+    .lower_federated` lowers eligible HOPs into `fed_*` instructions and
+    `repro.core.runtime.LineageRuntime` executes them, running each
+    site's local work as compiled jit segments through `LocalSite
+    .execute` (the plan-executing worker: kernel registry + process-wide
+    jit cache, so per-site gram runs the Pallas/BCOO kernels and
+    repeated runs replay warm executables);
+  * the **eager numpy methods** on `FederatedTensor` (`fed_mv`,
+    `fed_gram`, ...) — the in-process oracle used by tests and the
+    eager-numpy baseline in `benchmarks/federated_bench.py`.
+
+The multi-pod mesh backend lives in `repro.distributed.fedavg`: sites =
+slices along the `pod` mesh axis, instructions lower to shard_map
+programs with psum/all_gather on that axis only.
 """
 from __future__ import annotations
 
+import hashlib
 from dataclasses import dataclass, field
-from typing import Optional, Sequence
+from typing import Any, Optional
 
 import numpy as np
 
 
 @dataclass
 class ExchangeLog:
+    """Byte meter for master<->site traffic, with per-site attribution."""
+
     to_sites: int = 0      # bytes master -> workers
     from_sites: int = 0    # bytes workers -> master
+    per_site: dict = field(default_factory=dict)  # site idx -> total bytes
 
-    def add_out(self, arr):
-        self.to_sites += int(np.asarray(arr).nbytes)
+    def add_out(self, arr, site: Optional[int] = None):
+        nb = int(np.asarray(arr).nbytes)
+        self.to_sites += nb
+        if site is not None:
+            self.per_site[site] = self.per_site.get(site, 0) + nb
 
-    def add_in(self, arr):
-        self.from_sites += int(np.asarray(arr).nbytes)
+    def add_in(self, arr, site: Optional[int] = None):
+        nb = int(np.asarray(arr).nbytes)
+        self.from_sites += nb
+        if site is not None:
+            self.per_site[site] = self.per_site.get(site, 0) + nb
 
     @property
     def total(self) -> int:
         return self.to_sites + self.from_sites
 
+    def as_dict(self) -> dict:
+        return dict(to_sites=self.to_sites, from_sites=self.from_sites,
+                    total=self.total,
+                    per_site={int(k): int(v)
+                              for k, v in sorted(self.per_site.items())})
+
 
 @dataclass
 class LocalSite:
-    """An in-process 'remote worker' owning one partition."""
-    data: np.ndarray
+    """An in-process 'remote worker' owning one partition.
 
+    Two faces:
+
+      * `execute(op, args, attrs)` — the plan-executing worker: builds
+        the kernel from the `repro.core.backend` registry and runs it as
+        a compiled executable through the process-wide jit cache
+        (`repro.core.jit_cache`), so per-site work compiles once and
+        replays warm across federated plan executions. This is the path
+        the compiler-placed `fed_*` instructions use.
+      * the eager numpy methods (`mv`, `vm`, `gram`, `xtv`, `colsums`)
+        — the pure-numpy oracle for tests and the eager baseline.
+    """
+
+    data: Any  # np.ndarray or device array; rows × ncols partition
+
+    def execute(self, op: str, args: tuple, attrs: tuple = (), stats=None):
+        """Run one op over this site's data as a compiled segment.
+
+        `args` is the *full* kernel argument tuple (the caller places
+        `self.data` at the right position); `attrs` are the op's static
+        attributes as a sorted key/value tuple (part of the executable
+        cache key). Per-site sub-segments share warm executables across
+        sites/runs whenever (op, attrs, arg signature) match. `stats`
+        (a `RuntimeStats`) receives the same accounting the fused
+        segment executor books: compile seconds into `trace_time`, warm
+        lookups into `jit_cache_hits`.
+        """
+        from . import backend
+        from .jit_cache import get_jit_cache
+        cache = get_jit_cache()
+        seg_key = f"fedsite|{op}|{attrs!r}"
+        key, exe = cache.lookup(seg_key, args)
+        if exe is None:
+            kern = backend.get_kernel(op, dict(attrs))
+            exe, dt = cache.compile(key, lambda *xs: (kern(*xs),), args)
+            if stats is not None:
+                stats.trace_time += dt
+        elif stats is not None:
+            stats.jit_cache_hits += 1
+        out = exe(*args)[0]
+        backend.block_ready(out)
+        return out
+
+    # -- eager numpy oracle -------------------------------------------------
     def mv(self, v):           # X_i @ v
-        return self.data @ v
+        return np.asarray(self.data) @ v
 
     def vm(self, v_slice):     # v_i^T @ X_i
-        return v_slice.T @ self.data
+        return v_slice.T @ np.asarray(self.data)
 
     def gram(self):            # X_i^T X_i
-        return self.data.T @ self.data
+        d = np.asarray(self.data)
+        return d.T @ d
 
     def xtv(self, y_i):        # X_i^T y_i
-        return self.data.T @ y_i
+        return np.asarray(self.data).T @ y_i
 
     def colsums(self):
-        return self.data.sum(axis=0, keepdims=True)
+        return np.asarray(self.data).sum(axis=0, keepdims=True)
 
     def rows(self):
         return self.data.shape[0]
@@ -79,12 +150,26 @@ class FederatedTensor:
 
     @classmethod
     def partition_rows(cls, x: np.ndarray, n_sites: int) -> "FederatedTensor":
+        x = np.asarray(x)
+        if x.ndim != 2:
+            raise ValueError(
+                f"partition_rows requires a matrix, got shape {x.shape}")
+        if not 1 <= n_sites <= x.shape[0]:
+            raise ValueError(
+                f"n_sites must be in [1, {x.shape[0]}] (one non-empty row "
+                f"range per site), got {n_sites}")
         splits = np.array_split(np.arange(x.shape[0]), n_sites)
         sites, ranges = [], []
         for idx in splits:
             sites.append(LocalSite(x[idx]))
             ranges.append((int(idx[0]), int(idx[-1]) + 1))
         return cls(sites=sites, ranges=ranges, ncols=x.shape[1])
+
+    def _require_sites(self, op: str) -> None:
+        if not self.sites:
+            raise ValueError(
+                f"{op} over a federated tensor with zero sites — "
+                "partition data with FederatedTensor.partition_rows first")
 
     @property
     def nrows(self) -> int:
@@ -94,25 +179,27 @@ class FederatedTensor:
     def shape(self) -> tuple[int, int]:
         return (self.nrows, self.ncols)
 
-    # -- federated instructions (Example 2) ---------------------------------
+    # -- eager federated instructions (Example 2; the numpy oracle) ---------
     def fed_mv(self, v: np.ndarray) -> np.ndarray:
         """X @ v: broadcast v, local MV, rbind results."""
+        self._require_sites("fed_mv")
         parts = []
-        for s in self.sites:
-            self.log.add_out(v)          # broadcast
+        for i, s in enumerate(self.sites):
+            self.log.add_out(v, site=i)          # broadcast
             r = s.mv(v)
-            self.log.add_in(r)           # collect
+            self.log.add_in(r, site=i)           # collect
             parts.append(r)
         return np.concatenate(parts, axis=0)
 
     def fed_vm(self, v: np.ndarray) -> np.ndarray:
         """v^T @ X: send only the relevant slice of v, add local results."""
+        self._require_sites("fed_vm")
         out = None
-        for s, (a, b) in zip(self.sites, self.ranges):
+        for i, (s, (a, b)) in enumerate(zip(self.sites, self.ranges)):
             vs = v[a:b]
-            self.log.add_out(vs)
+            self.log.add_out(vs, site=i)
             r = s.vm(vs)
-            self.log.add_in(r)
+            self.log.add_in(r, site=i)
             out = r if out is None else out + r
         return out
 
@@ -120,34 +207,79 @@ class FederatedTensor:
         """X^T X with only n×n bytes exchanged per site (data never moves).
         This is the same fold decomposition the reuse rewrites exploit —
         federated learning and CV partial reuse share one algebraic core."""
+        self._require_sites("fed_gram")
         out = None
-        for s in self.sites:
+        for i, s in enumerate(self.sites):
             g = s.gram()
-            self.log.add_in(g)
+            self.log.add_in(g, site=i)
             out = g if out is None else out + g
         return out
 
     def fed_xtv(self, y: np.ndarray) -> np.ndarray:
+        self._require_sites("fed_xtv")
         out = None
-        for s, (a, b) in zip(self.sites, self.ranges):
+        for i, (s, (a, b)) in enumerate(zip(self.sites, self.ranges)):
             ys = y[a:b]
-            self.log.add_out(ys)
+            self.log.add_out(ys, site=i)
             r = s.xtv(ys)
-            self.log.add_in(r)
+            self.log.add_in(r, site=i)
             out = r if out is None else out + r
         return out
 
     def fed_colsums(self) -> np.ndarray:
+        self._require_sites("fed_colsums")
         out = None
-        for s in self.sites:
+        for i, s in enumerate(self.sites):
             r = s.colsums()
-            self.log.add_in(r)
+            self.log.add_in(r, site=i)
             out = r if out is None else out + r
         return out
 
     def collect(self) -> np.ndarray:
         """Materialize (breaks federation — for tests/debug only)."""
-        return np.concatenate([s.data for s in self.sites], axis=0)
+        self._require_sites("collect")
+        return np.concatenate([np.asarray(s.data) for s in self.sites],
+                              axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Compiler integration: federated DAG leaves (§3.3 — fed_* instructions
+# are generated by the optimizer, not hand-written by users)
+# ---------------------------------------------------------------------------
+
+def site_fingerprints(fed: FederatedTensor) -> str:
+    """Stable identity of a federated tensor's *data*: one content
+    fingerprint per site plus the row partitioning. Lineage hashes over
+    federated inputs derive from this, so reuse of federated
+    intermediates is sound — re-partitioned or re-bound data never
+    aliases a cached value."""
+    from .dag import _fingerprint
+    h = hashlib.sha1()
+    for s, (a, b) in zip(fed.sites, fed.ranges):
+        h.update(f"{a}:{b}:".encode())
+        h.update(_fingerprint(np.asarray(s.data)).encode())
+    return h.hexdigest()
+
+
+def federated_input(name: Optional[str], fed: FederatedTensor,
+                    sparsity: float = 1.0):
+    """Create a DAG leaf bound to a `FederatedTensor`.
+
+    The leaf carries `placement='federated'`; the compiler's placement
+    pass (`repro.core.compiler.lower_federated`) propagates placement
+    over the DAG and lowers eligible patterns into `fed_*` instructions.
+    Its lineage id hashes the per-site data fingerprints, so lineage
+    reuse works on federated intermediates exactly like local ones.
+    """
+    from .dag import LEAVES, LTensor, make_node
+    fed._require_sites("federated_input")
+    name = name or "fed"
+    dtype = np.result_type(*(np.asarray(s.data).dtype for s in fed.sites))
+    node = make_node("input", (), fed.shape, dtype, sparsity,
+                     placement="federated", name=name,
+                     n_sites=len(fed.sites))
+    LEAVES.bind(node, fed, f"fed:{name}:{site_fingerprints(fed)}")
+    return LTensor(node)
 
 
 # ---------------------------------------------------------------------------
@@ -156,11 +288,18 @@ class FederatedTensor:
 
 def federated_lmds(fx: FederatedTensor, y: np.ndarray, reg: float = 1e-7,
                    intercept: bool = False) -> np.ndarray:
-    """lmDS over a federated X: only gram-sized aggregates leave sites."""
+    """lmDS over a federated X: only gram-sized aggregates leave sites.
+
+    Eager numpy oracle. The compiled equivalent is
+    `repro.lifecycle.regression.lmDS` over a `federated_input` leaf,
+    which routes the same exchange pattern through the DAG -> cost model
+    -> fused-segment stack (see `tests/test_fed_placement.py` for the
+    exchange-byte parity invariants).
+    """
     if intercept:
         fx = FederatedTensor(
             sites=[LocalSite(np.concatenate(
-                [s.data, np.ones((s.rows(), 1))], axis=1))
+                [np.asarray(s.data), np.ones((s.rows(), 1))], axis=1))
                 for s in fx.sites],
             ranges=fx.ranges, ncols=fx.ncols + 1, log=fx.log)
     a = fx.fed_gram() + reg * np.eye(fx.ncols)

@@ -17,7 +17,7 @@ __all__ = [
     "colSums", "rowSums", "colMeans", "rowMeans", "colVars", "colMaxs",
     "colMins", "nnz", "exp", "log", "sqrt", "abs_", "sign", "sigmoid",
     "round_", "minimum", "maximum", "where", "ones", "zeros", "full", "eye",
-    "rand", "seq", "replace_nan", "cumsum",
+    "rand", "seq", "replace_nan", "cumsum", "quantile",
 ]
 
 
@@ -171,6 +171,26 @@ def colMins(x):
 def cumsum(x):
     x = as_ltensor(x)
     return LTensor(make_node("cumsum", (x.node,), x.shape, x.dtype, 1.0))
+
+
+def quantile(x, q: float):
+    """Per-column nan-aware quantile as a *host-op node* (SystemDS runs
+    sort-based order statistics in the control program).
+
+    Unlike an `evaluate()` round trip, this keeps quantile-based
+    cleaning (impute_by_median, outlier_by_iqr, winsorize) inside one
+    plan: lineage is preserved through the quantile, so downstream
+    reuse sees the whole pipeline. The op is in
+    `backend.NON_TRACEABLE_OPS` — the segmenter isolates it and the
+    runtime executes it eagerly on the host, outside any jit trace.
+    """
+    x = as_ltensor(x)
+    if x.ndim != 2:
+        raise ValueError(f"quantile requires a matrix, got shape {x.shape}")
+    if not 0.0 <= float(q) <= 1.0:
+        raise ValueError(f"quantile q must be in [0, 1], got {q}")
+    return LTensor(make_node("quantile", (x.node,), (1, x.shape[1]),
+                             np.float64, 1.0, q=float(q)))
 
 
 # -- elementwise ---------------------------------------------------------------

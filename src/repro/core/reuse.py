@@ -39,6 +39,9 @@ def nbytes(value) -> int:
     overcharge, and so entries lacking `.nbytes` entirely don't fall
     through to a stub size that would break eviction pressure.
     """
+    sites = getattr(value, "sites", None)  # FederatedTensor intermediates
+    if sites is not None:
+        return sum(nbytes(getattr(s, "data", s)) for s in sites)
     data = getattr(value, "data", None)  # BCOO and friends
     indices = getattr(value, "indices", None)
     if data is not None and indices is not None:

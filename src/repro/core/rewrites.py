@@ -43,7 +43,8 @@ def transform(roots: list[Node], fn: Callable[[Node], Node]) -> list[Node]:
             new_inputs = tuple(rec(i) for i in n.inputs)
             if any(a is not b for a, b in zip(new_inputs, n.inputs)):
                 n2 = Node(op=n.op, inputs=new_inputs, attrs=n.attrs,
-                          shape=n.shape, dtype=n.dtype, sparsity=n.sparsity)
+                          shape=n.shape, dtype=n.dtype, sparsity=n.sparsity,
+                          placement=n.placement)
             else:
                 n2 = n
         else:

@@ -5,6 +5,13 @@ intermediate environment (buffer pool with liveness-based frees), traces
 lineage for every executed operation, and probes/populates the lineage
 reuse cache (§4.1).
 
+Federated plans (§3.3) execute here too: `fed_*` instructions emitted
+by the compiler's placement pass loop over the bound `FederatedTensor`'s
+sites, run each site's local work as compiled sub-segments
+(`LocalSite.execute` -> kernel registry + jit cache), and meter every
+byte crossing the federation boundary into `stats.exchange` — per site,
+identically across fuse modes.
+
 `PreparedScript` is the JMLC analogue: trace a python function once into
 a DAG with placeholder leaves, then re-execute with new in-memory inputs
 at low latency (plan is compiled once; lineage is recomputed per input so
@@ -22,6 +29,7 @@ from . import backend
 from .compiler import Plan, compile_plan
 from .dag import (LEAVES, LTensor, Node, _fingerprint, _lhash_rec,
                   input_tensor)  # _fingerprint: PreparedScript lineage
+from .federated import ExchangeLog, FederatedTensor, LocalSite
 from .jit_cache import get_jit_cache
 from .reuse import ReuseCache
 
@@ -35,13 +43,22 @@ class RuntimeStats:
     segments: int = 0        # segments dispatched on the fused path
     jit_cache_hits: int = 0  # warm compiled-executable lookups
     trace_time: float = 0.0  # seconds spent tracing+compiling segments
+    # bytes crossing the federation boundary (fed_* / collect
+    # instructions), metered per site — the §3.3 "exchange constraints"
+    # as an auditable budget. Identical across fuse modes by
+    # construction: both executors run the same federated instructions
+    # and probe the reuse cache at the same compile-time points.
+    exchange: ExchangeLog = field(default_factory=ExchangeLog)
 
     def as_dict(self):
-        return dict(instructions=self.instructions, executed=self.executed,
-                    reused=self.reused, exec_time_s=round(self.exec_time, 6),
-                    segments=self.segments,
-                    jit_cache_hits=self.jit_cache_hits,
-                    trace_time_s=round(self.trace_time, 6))
+        out = dict(instructions=self.instructions, executed=self.executed,
+                   reused=self.reused, exec_time_s=round(self.exec_time, 6),
+                   segments=self.segments,
+                   jit_cache_hits=self.jit_cache_hits,
+                   trace_time_s=round(self.trace_time, 6))
+        if self.exchange.total:
+            out["exchange"] = self.exchange.as_dict()
+        return out
 
 
 class LineageRuntime:
@@ -112,6 +129,12 @@ class LineageRuntime:
                     else:
                         raise KeyError(
                             f"unbound input leaf {inp.attr('name')}")
+                    if isinstance(src, FederatedTensor):
+                        # federated leaves bind the metadata object;
+                        # partitions never move unless a `collect`
+                        # instruction says so
+                        values[inp.uid] = src
+                        continue
                     # sparsify per bind, never memoized: a cached
                     # conversion cannot detect in-place mutation of the
                     # source array without a full-content scan that
@@ -145,18 +168,15 @@ class LineageRuntime:
                     values[ins.out_id] = _coerce_format(
                         hit, fmts.get(ins.out_id, backend.DENSE))
                     self.stats.reused += 1
-                    self._free(values, ins.last_use_of, plan)
+                    self._free(values, ins.last_use_of)
                     continue
-            ins_inputs = [values[i] for i in ins.input_ids]
-            kern = backend.kernel_for_node(
-                node,
-                in_fmts=tuple(fmts.get(u, backend.DENSE)
-                              for u in ins.input_ids),
-                out_fmt=fmts.get(ins.out_id, backend.DENSE))
-            t0 = time.perf_counter()
-            out = kern(*ins_inputs)
-            backend.block_ready(out)
-            dt = time.perf_counter() - t0
+            t0, tt0 = time.perf_counter(), self.stats.trace_time
+            out = self._exec_one(ins, values, fmts)
+            # per-site sub-segment compiles (federated ops) book into
+            # trace_time inside LocalSite.execute — keep them out of
+            # exec_time, mirroring _execute_cached's split
+            dt = (time.perf_counter() - t0
+                  - (self.stats.trace_time - tt0))
             self.stats.executed += 1
             self.stats.exec_time += dt
             values[ins.out_id] = out
@@ -167,7 +187,7 @@ class LineageRuntime:
                 # hit counts) cannot diverge under pool pressure the way
                 # measured wall-times would
                 self.cache.put(lhash, out, ins.est_cost_s, gated=False)
-            self._free(values, ins.last_use_of, plan)
+            self._free(values, ins.last_use_of)
 
     # ------------------------------------------------------------------
     def _run_segments(self, plan: Plan, values: dict[int, Any],
@@ -214,12 +234,29 @@ class LineageRuntime:
                         self._run_compensation(seg, seg_key, fmts, args,
                                                rest, last.out_id, jcache,
                                                values)
-                    self._free(values, seg.frees, plan)
+                    self._free(values, seg.frees)
                     continue
-            from .segments import build_segment_fn
-            outs = self._execute_cached(
-                seg_key, lambda: build_segment_fn(seg, fmts), args, jcache)
-            self.stats.executed += len(seg.instructions)
+            if last.node.op in backend.NON_TRACEABLE_OPS:
+                # host-path segment (always single-instruction): the
+                # SAME `_exec_one` the interpreter uses, so fuse modes
+                # cannot diverge — federated orchestration / collect
+                # boundaries dispatch per-site compiled sub-segments
+                # and meter the exchange; other host ops (quantile) run
+                # their kernel eagerly, outside any jit trace
+                t0, tt0 = time.perf_counter(), self.stats.trace_time
+                out = self._exec_one(last, values, fmts)
+                # per-site compiles booked into trace_time by
+                # LocalSite.execute; exec_time gets the rest
+                self.stats.exec_time += (time.perf_counter() - t0
+                                         - (self.stats.trace_time - tt0))
+                outs = (out,)
+                self.stats.executed += 1
+            else:
+                from .segments import build_segment_fn
+                outs = self._execute_cached(
+                    seg_key, lambda: build_segment_fn(seg, fmts), args,
+                    jcache)
+                self.stats.executed += len(seg.instructions)
             for uid, val in zip(seg.output_uids, outs, strict=True):
                 values[uid] = val
             if lhash is not None:
@@ -227,7 +264,7 @@ class LineageRuntime:
                 # _run_instructions) — keeps eviction mode-identical
                 self.cache.put(lhash, values[last.out_id],
                                last.est_cost_s, gated=False)
-            self._free(values, seg.frees, plan)
+            self._free(values, seg.frees)
 
     # ------------------------------------------------------------------
     def _execute_cached(self, seg_key: str, build_fn, args, jcache):
@@ -264,8 +301,185 @@ class LineageRuntime:
         for uid, val in zip(rest, outs, strict=True):
             values[uid] = val
 
+    # ------------------------------------------------------------------
+    def _exec_one(self, ins, values: dict[int, Any], fmts: dict):
+        """Execute one instruction eagerly on concrete values — the
+        single implementation shared by the interpreter loop and the
+        segment executor's host path (non-traceable singleton
+        segments), so cross-mode parity cannot erode: federated ops
+        route to the site orchestrator, everything else runs its
+        registry kernel with a device sync."""
+        node = ins.node
+        if node.op in backend.FED_OPS or node.op == backend.COLLECT_OP:
+            return self._exec_federated(ins, values)
+        kern = backend.kernel_for_node(
+            node,
+            in_fmts=tuple(fmts.get(u, backend.DENSE)
+                          for u in ins.input_ids),
+            out_fmt=fmts.get(ins.out_id, backend.DENSE))
+        out = kern(*[values[u] for u in ins.input_ids])
+        backend.block_ready(out)
+        return out
+
+    # ------------------------------------------------------------------
+    def _exec_federated(self, ins, values: dict[int, Any]):
+        """Execute one federated instruction (or a `collect` boundary).
+
+        Master-side orchestration: loop over sites, run each site's
+        local work as a compiled sub-segment (`LocalSite.execute` — the
+        kernel registry + process-wide jit cache, so per-site gram runs
+        the same Pallas/BCOO kernels as local plans and repeated runs
+        replay warm executables), and meter every byte crossing the
+        federation boundary into `stats.exchange`, per site.
+        """
+        node = ins.node
+        op = node.op
+        log = self.stats.exchange
+        args = [values[u] for u in ins.input_ids]
+
+        if op == backend.COLLECT_OP:
+            fed = args[0]
+            fed._require_sites(op)
+            parts = []
+            for i, s in enumerate(fed.sites):
+                log.add_in(s.data, site=i)
+                parts.append(np.asarray(s.data))
+            return np.concatenate(parts, axis=0)
+
+        if op == "fed_gram":
+            fed = args[0]
+            fed._require_sites(op)
+            out = None
+            for i, s in enumerate(fed.sites):
+                g = s.execute("gram", (s.data,), stats=self.stats)
+                log.add_in(g, site=i)
+                out = g if out is None else out + g
+            return out
+
+        if op in ("fed_xtv", "fed_vm"):
+            # x^T v with any subset of {x, v} federated: per-site
+            # partial products summed at the master; row-aligned local
+            # operands are sent sliced (only the relevant rows travel)
+            fed_pos = set(node.attr("fed_args", (0,)))
+            fed = args[min(fed_pos)]
+            fed._require_sites(op)
+            self._check_alignment(op, [args[p] for p in sorted(fed_pos)])
+            # densify local operands once, outside the site loop
+            args = [v if pos in fed_pos else backend.densify(v)
+                    for pos, v in enumerate(args)]
+            out = None
+            for i, (a, b) in enumerate(fed.ranges):
+                site_args = []
+                for pos, v in enumerate(args):
+                    if pos in fed_pos:
+                        site_args.append(v.sites[i].data)
+                    else:
+                        sl = v[a:b]
+                        log.add_out(sl, site=i)
+                        site_args.append(sl)
+                r = fed.sites[i].execute("xtv", tuple(site_args),
+                                         stats=self.stats)
+                log.add_in(r, site=i)
+                out = r if out is None else out + r
+            return out
+
+        if op == "fed_mv":
+            fed, w = args
+            fed._require_sites(op)
+            w = backend.densify(w)
+            parts = []
+            for i, s in enumerate(fed.sites):
+                log.add_out(w, site=i)  # broadcast
+                r = s.execute("matmul", (s.data, w), stats=self.stats)
+                log.add_in(r, site=i)   # rbind of per-site results
+                parts.append(np.asarray(r))
+            return np.concatenate(parts, axis=0)
+
+        if op == "fed_colsums":
+            fed = args[0]
+            fed._require_sites(op)
+            out = None
+            for i, s in enumerate(fed.sites):
+                r = s.execute("colSums", (s.data,), stats=self.stats)
+                log.add_in(r, site=i)
+                out = r if out is None else out + r
+            return out
+
+        if op == "fed_map":
+            return self._exec_fed_map(node, args, log)
+
+        raise NotImplementedError(f"federated op {op!r}")
+
+    def _exec_fed_map(self, node, args: list, log: ExchangeLog
+                      ) -> FederatedTensor:
+        """Row-preserving op applied per site: the output is a new
+        `FederatedTensor` over the same ranges — no aggregate exchange.
+        Local operands travel by shape: scalars and `full` generators
+        cost nothing (generated on site), broadcast rows go to every
+        site, row-aligned matrices are sent sliced."""
+        inner = node.attr("inner")
+        n_args = node.attr("n_args")
+        fed_pos = set(node.attr("fed_args", ()))
+        gens = {p: (v, k, dt) for p, v, k, dt in node.attr("gen_args", ())}
+        iattrs = dict(node.attr("iattrs", ()))
+        slot: dict[int, Any] = {}
+        it = iter(args)
+        for pos in range(n_args):
+            if pos not in gens:
+                v = next(it)
+                # densify local operands once, outside the site loop
+                slot[pos] = v if pos in fed_pos else backend.densify(v)
+        feds = [slot[p] for p in sorted(fed_pos)]
+        fed = feds[0]
+        fed._require_sites("fed_map")
+        self._check_alignment("fed_map", feds)
+        new_sites = []
+        for i, (a, b) in enumerate(fed.ranges):
+            rows_i = b - a
+            ia = dict(iattrs)
+            if inner == "slice":
+                # rebase the absolute row range onto this site's rows
+                idx = list(ia["index"])
+                idx[0] = (0, rows_i, 0)
+                ia["index"] = tuple(idx)
+            site_args = []
+            for pos in range(n_args):
+                if pos in gens:
+                    val, k, dt = gens[pos]
+                    site_args.append(
+                        np.full((rows_i, int(k)), val, dtype=np.dtype(dt)))
+                elif pos in fed_pos:
+                    site_args.append(slot[pos].sites[i].data)
+                else:
+                    v = slot[pos]
+                    shp = getattr(v, "shape", ())
+                    if shp == () or shp[0] == 1:
+                        if shp != ():
+                            log.add_out(v, site=i)  # broadcast row
+                        site_args.append(v)
+                    else:
+                        sl = v[a:b]
+                        log.add_out(sl, site=i)
+                        site_args.append(sl)
+            out_i = fed.sites[i].execute(
+                inner, tuple(site_args), attrs=tuple(sorted(ia.items())),
+                stats=self.stats)
+            new_sites.append(LocalSite(out_i))
+        return FederatedTensor(sites=new_sites, ranges=list(fed.ranges),
+                               ncols=node.shape[1])
+
     @staticmethod
-    def _free(values: dict[int, Any], uids: tuple[int, ...], plan: Plan):
+    def _check_alignment(op: str, feds: list) -> None:
+        ranges = feds[0].ranges
+        for f in feds[1:]:
+            if list(f.ranges) != list(ranges):
+                raise ValueError(
+                    f"{op}: federated operands are partitioned "
+                    f"differently ({f.ranges} vs {ranges}); joint "
+                    "federated execution requires aligned row ranges")
+
+    @staticmethod
+    def _free(values: dict[int, Any], uids: tuple[int, ...]):
         for uid in uids:
             values.pop(uid, None)
 
@@ -347,7 +561,12 @@ class PreparedScript:
             opt_level=self.runtime.opt_level)
 
     def __call__(self, *arrays) -> list[np.ndarray]:
-        assert len(arrays) == len(self._leaves)
+        if len(arrays) != len(self._leaves):
+            # a real error, not an assert: argument-count bugs must
+            # surface under `python -O` too
+            raise ValueError(
+                f"PreparedScript expects {len(self._leaves)} argument(s), "
+                f"got {len(arrays)}")
         leaf_values: dict[int, Any] = {}
         leaf_lineage: dict[int, str] = {}
         # content fingerprints keep reuse sound across re-binds, but they

@@ -16,11 +16,18 @@ Segment boundaries are forced by:
     between probes fuses, so HPO/CV loops run multi-instruction
     segments with reuse hit behaviour identical to the per-instruction
     interpreter (which gates its probes on the same flag)
-  * execution-target changes — heavy `local` and `distributed`
-    instructions never share a segment (scalar generators are
-    target-neutral and join either side)
-  * non-traceable ops — anything in `backend.NON_TRACEABLE_OPS` runs in
-    its own segment, outside any jit trace
+  * execution-target changes — heavy `local`, `distributed`, and
+    `federated` instructions never share a segment (scalar generators
+    are target-neutral and join either side). Placement-aware
+    segmentation falls out of this: a federated plan interleaves
+    jit-fused local segments with single-instruction `federated`
+    segments, and each `fed_*` instruction's *per-site* work is itself
+    compiled through the kernel registry + jit cache as per-site
+    sub-segments (`repro.core.federated.LocalSite.execute`)
+  * non-traceable ops — anything in `backend.NON_TRACEABLE_OPS` (the
+    `fed_*` site-orchestration ops, `collect` exchange boundaries, and
+    host ops like `quantile`) runs in its own segment, outside any jit
+    trace; the runtime executes those eagerly on the host path
 
 Each segment carries a *canonical structural key*: `dag.structural_key`
 computed with segment inputs pre-seeded positionally, so two segments
@@ -54,7 +61,7 @@ class Segment:
                                   # (plan outputs + cross-segment uses)
     output_nodes: tuple[Node, ...]
     frees: tuple[int, ...]        # uids dead after this segment
-    target: str                   # 'local' | 'distributed'
+    target: str                   # 'local' | 'distributed' | 'federated'
     key: str                      # canonical structural hash
 
     @property

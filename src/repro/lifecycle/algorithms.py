@@ -3,6 +3,13 @@
 Batch 1st/2nd-order algorithms written on the DSL — the hot linear
 algebra runs through the lineage runtime (and thus the gram kernel +
 reuse cache); light control flow stays in the host control program.
+
+Like the regression builtins, these are placement-neutral (§3.3): pass
+a `repro.core.federated_input` leaf as X and the compiler's placement
+pass federates the plan — e.g. `pca` over a federated X lowers the
+centering to a broadcast `fed_map`, the covariance to `fed_gram`, and
+the projection to `fed_mv`; only column-sized aggregates leave the
+sites (see `tests/test_fed_placement.py::TestFederatedParity`).
 """
 from __future__ import annotations
 

@@ -50,12 +50,14 @@ def impute_by_mean(X: LTensor, runtime: Optional[LineageRuntime] = None
 
 def impute_by_median(X: LTensor, runtime: Optional[LineageRuntime] = None
                      ) -> np.ndarray:
-    """Median imputation; order statistics run in the control program
-    (host) like SystemDS's sort-based quantiles."""
-    rt = _rt(runtime)
-    x = rt.evaluate([X])[0]
-    med = np.nanmedian(x, axis=0, keepdims=True)
-    return np.where(np.isnan(x), med, x)
+    """Median imputation. The median is an `ops.quantile` *host-op
+    node* (sort-based order statistics run in the control program, like
+    SystemDS's quantiles) rather than an `evaluate()` round trip — the
+    whole pipeline stays one plan, so lineage (and therefore downstream
+    reuse) flows through it."""
+    med = ops.quantile(X, 0.5)
+    out = ops.where(isnan_mask(X), med, X)
+    return _rt(runtime).evaluate([out])[0]
 
 
 def mice_lite(X: LTensor, n_iter: int = 3, reg: float = 1e-3,
@@ -96,19 +98,25 @@ def mice_lite(X: LTensor, n_iter: int = 3, reg: float = 1e-3,
 
 def outlier_by_iqr(X: LTensor, k: float = 1.5, repair: str = "nan",
                    runtime: Optional[LineageRuntime] = None) -> np.ndarray:
-    """Flag/repair values outside [Q1 - k·IQR, Q3 + k·IQR] per column."""
-    rt = _rt(runtime)
-    x = rt.evaluate([X])[0] if isinstance(X, LTensor) else np.asarray(X)
-    q1 = np.nanquantile(x, 0.25, axis=0, keepdims=True)
-    q3 = np.nanquantile(x, 0.75, axis=0, keepdims=True)
+    """Flag/repair values outside [Q1 - k·IQR, Q3 + k·IQR] per column.
+
+    Quantiles are host-op nodes; the mask algebra stays in the DSL, so
+    the whole repair is one plan with unbroken lineage."""
+    X = X if isinstance(X, LTensor) else input_tensor("iqrX", np.asarray(X))
+    q1 = ops.quantile(X, 0.25)
+    q3 = ops.quantile(X, 0.75)
     iqr = q3 - q1
     lo, hi = q1 - k * iqr, q3 + k * iqr
-    bad = (x < lo) | (x > hi)
+    bad = (X < lo)._bin(X > hi, "or")
     if repair == "nan":
-        return np.where(bad, np.nan, x)
-    if repair == "clip":
-        return np.clip(x, lo, hi)
-    return bad.astype(np.float64)  # repair == "flag"
+        out = ops.where(bad, float("nan"), X)
+    elif repair == "clip":
+        out = ops.minimum(ops.maximum(X, lo), hi)
+    else:  # repair == "flag"
+        out = bad
+    # comparison kernels produce 0/1 f32 matrices; callers of this
+    # builtin always got f64 back
+    return np.asarray(_rt(runtime).evaluate([out])[0], dtype=np.float64)
 
 
 def outlier_by_sd(X: LTensor, k: float = 3.0, repair: str = "nan",
@@ -130,12 +138,13 @@ def outlier_by_sd(X: LTensor, k: float = 3.0, repair: str = "nan",
 
 def winsorize(X: LTensor, lower: float = 0.05, upper: float = 0.95,
               runtime: Optional[LineageRuntime] = None) -> np.ndarray:
-    """Clamp each column to its [lower, upper] quantiles."""
-    rt = _rt(runtime)
-    x = rt.evaluate([X])[0] if isinstance(X, LTensor) else np.asarray(X)
-    lo = np.nanquantile(x, lower, axis=0, keepdims=True)
-    hi = np.nanquantile(x, upper, axis=0, keepdims=True)
-    xt = input_tensor("winsX", x)
-    out = ops.minimum(ops.maximum(xt, input_tensor("winsLo", lo)),
-                      input_tensor("winsHi", hi))
-    return rt.evaluate([out])[0]
+    """Clamp each column to its [lower, upper] quantiles.
+
+    One plan, one evaluation: both quantiles are host-op nodes feeding
+    the clamp directly (previously this evaluated X, re-entered the DSL
+    with fresh leaves, and evaluated again — severing lineage and
+    computing X twice)."""
+    X = X if isinstance(X, LTensor) else input_tensor("winsX", np.asarray(X))
+    out = ops.minimum(ops.maximum(X, ops.quantile(X, lower)),
+                      ops.quantile(X, upper))
+    return _rt(runtime).evaluate([out])[0]

@@ -150,6 +150,53 @@ class TestCleaning:
         np.testing.assert_allclose(s.mean(axis=0), 0, atol=1e-12)
         np.testing.assert_allclose(s.std(axis=0, ddof=1), 1, rtol=1e-6)
 
+    def test_quantile_host_op_matches_numpy(self, rng):
+        x = rng.normal(size=(150, 4))
+        x[3, 1] = np.nan
+        q = LineageRuntime().evaluate(
+            [ops.quantile(input_tensor("X", x), 0.25)])[0]
+        np.testing.assert_allclose(
+            q, np.nanquantile(x, 0.25, axis=0, keepdims=True))
+        with pytest.raises(ValueError, match="q must be"):
+            ops.quantile(input_tensor("Xq", x), 1.5)
+
+    def test_outlier_iqr_matches_numpy_reference(self, rng):
+        x = rng.normal(size=(200, 3))
+        x[0, 0] = 50.0
+        x[5, 2] = np.nan
+        q1 = np.nanquantile(x, 0.25, axis=0, keepdims=True)
+        q3 = np.nanquantile(x, 0.75, axis=0, keepdims=True)
+        lo, hi = q1 - 1.5 * (q3 - q1), q3 + 1.5 * (q3 - q1)
+        bad = (x < lo) | (x > hi)
+        flagged = outlier_by_iqr(input_tensor("Xa", x), repair="nan")
+        np.testing.assert_array_equal(np.isnan(flagged),
+                                      np.isnan(x) | bad)
+        clipped = outlier_by_iqr(input_tensor("Xb", x), repair="clip")
+        np.testing.assert_allclose(
+            clipped[~np.isnan(x)], np.clip(x, lo, hi)[~np.isnan(x)])
+        flags = outlier_by_iqr(input_tensor("Xc", x), repair="flag")
+        np.testing.assert_array_equal(flags != 0, bad)
+
+    def test_cleaning_stays_in_one_plan_with_lineage(self, rng):
+        """Quantiles are host-op *nodes* now: the cleaning pipelines run
+        as one plan, and downstream reuse sees the quantile values
+        (previously an evaluate() round trip severed lineage)."""
+        x = rng.normal(size=(4000, 8))
+        x[rng.random(x.shape) < 0.05] = np.nan
+        X = input_tensor("XL", x)
+        rt = LineageRuntime(cache=ReuseCache())
+        first = winsorize(X, runtime=rt)
+        probes_after_first = rt.cache.stats.probes
+        assert rt.cache.stats.hits == 0
+        second = winsorize(X, runtime=rt)   # identical lineage -> hits
+        assert rt.cache.stats.hits > 0
+        assert rt.cache.stats.probes > probes_after_first
+        np.testing.assert_allclose(first, second, equal_nan=True)
+        # median imputation likewise single-plan; matches the reference
+        out = impute_by_median(X, runtime=rt)
+        med = np.nanmedian(x, axis=0, keepdims=True)
+        np.testing.assert_allclose(out, np.where(np.isnan(x), med, x))
+
 
 class TestAlgorithms:
     def test_pca_matches_numpy(self, rng):
