@@ -17,7 +17,11 @@ def run_cv(x, y, k, reuse):
     from repro.lifecycle.validation import make_folds
     rt = LineageRuntime(cache=ReuseCache() if reuse else None)
     fx, fy = make_folds(x, y, k, seed=11)
-    return cross_validate_lm(fx, fy, runtime=rt), rt
+    # mode='sequential' pins the Fig. 7 semantics (per-fold plans, the
+    # distribute-for-reuse rewrite sharing fold grams through the
+    # cache); the batched path is measured in benchmarks/parfor_bench.py
+    return cross_validate_lm(fx, fy, runtime=rt,
+                             mode="sequential"), rt
 
 
 def main(rows=ROWS, cols=COLS, folds=(4, 8)) -> None:

@@ -16,6 +16,10 @@ Prints ``name,us_per_call,derived`` CSV lines.
                           (appends a BENCH_fusion.json trajectory entry)
   sparse_*              — ISSUE 3: sparsity-aware fused execution +
                           cost-gated reuse probes (BENCH_sparse.json)
+  parfor_batched_grid   — ISSUE 5: the whole HPO grid as one vmapped
+                          fused-segment stack vs the sequential-reuse
+                          loop, plus federated exchange-round invariants
+                          (BENCH_parfor.json)
 
 Every run ends with a summary table aggregating the latest entry of all
 ``BENCH_*.json`` trajectories.
@@ -34,29 +38,51 @@ BENCH_DIR = os.path.dirname(os.path.abspath(__file__))
 
 
 def aggregate() -> None:
-    """Print one summary row per BENCH_*.json (latest trajectory entry)."""
+    """Print one summary row per BENCH_*.json (latest trajectory entry).
+
+    Tolerant of missing / schema-drifted trajectories: a file that
+    vanished mid-run, is not a JSON list, is empty, or whose latest
+    entry is not an object gets a warning line and is skipped — a
+    single stale trajectory must never crash the whole summary table.
+    """
     paths = sorted(glob.glob(os.path.join(BENCH_DIR, "BENCH_*.json")))
     if not paths:
         return
     rows = []
     for path in paths:
+        name = os.path.basename(path)
         try:
             with open(path) as f:
                 trajectory = json.load(f)
-            entry = trajectory[-1]
-        except Exception as e:
-            print(f"!! {os.path.basename(path)}: unreadable trajectory "
-                  f"({type(e).__name__}: {e})")
+        except FileNotFoundError:
+            print(f"!! {name}: disappeared during aggregation — skipped")
             continue
-        metrics = "; ".join(
-            f"{k.replace('_us_per_call', '')}={v}us" if
-            k.endswith("_us_per_call") else f"{k}={v}"
-            for k, v in entry.items()
-            if k.endswith("_us_per_call") or k.startswith("speedup"))
-        rows.append((os.path.basename(path),
-                     str(entry.get("benchmark", "?")),
-                     str(entry.get("workload", ""))[:46],
-                     metrics))
+        except Exception as e:
+            print(f"!! {name}: unreadable trajectory "
+                  f"({type(e).__name__}: {e}) — skipped")
+            continue
+        if not isinstance(trajectory, list) or not trajectory:
+            print(f"!! {name}: expected a non-empty JSON list of entries, "
+                  f"got {type(trajectory).__name__} — skipped")
+            continue
+        entry = trajectory[-1]
+        if not isinstance(entry, dict):
+            print(f"!! {name}: latest entry is "
+                  f"{type(entry).__name__}, not an object — skipped")
+            continue
+        try:
+            metrics = "; ".join(
+                f"{k.replace('_us_per_call', '')}={v}us" if
+                k.endswith("_us_per_call") else f"{k}={v}"
+                for k, v in entry.items()
+                if k.endswith("_us_per_call") or k.startswith("speedup"))
+            rows.append((name,
+                         str(entry.get("benchmark", "?")),
+                         str(entry.get("workload", ""))[:46],
+                         metrics))
+        except Exception as e:  # drifted field types inside the entry
+            print(f"!! {name}: schema drift in latest entry "
+                  f"({type(e).__name__}: {e}) — skipped")
     if not rows:
         return
     headers = ("trajectory", "benchmark", "workload", "metrics")
@@ -72,7 +98,8 @@ def aggregate() -> None:
 
 def main() -> None:
     if "--smoke" in sys.argv:
-        from benchmarks import federated_bench, fusion_bench, sparse_bench
+        from benchmarks import (federated_bench, fusion_bench,
+                                parfor_bench, sparse_bench)
         print("name,us_per_call,derived")
         fusion_bench.main(rows=500, cols=32, calls=20, repeats=2)
         sparse_bench.main(rows=512, cols=64, calls=10, repeats=2)
@@ -80,11 +107,13 @@ def main() -> None:
         # (at toy sizes fixed plan/probe overhead hides the reuse win)
         federated_bench.main(rows=4096, cols=96, n_sites=3, repeats=3,
                              eager_layer=False)
+        parfor_bench.main(rows=2048, cols=64, k=16, repeats=2,
+                          fed_rows=1024, fed_cols=32)
         aggregate()
         return
     from benchmarks import (cv_reuse, federated_bench, fusion_bench,
                             hpo_baseline, hpo_reuse, kernel_bench,
-                            roofline_bench, sparse_bench)
+                            parfor_bench, roofline_bench, sparse_bench)
     quick = "--quick" in sys.argv
     ks = (1, 5, 10) if quick else (1, 5, 10, 20)
     print("name,us_per_call,derived")
@@ -96,6 +125,7 @@ def main() -> None:
     roofline_bench.main()
     fusion_bench.main(calls=20 if quick else 50)
     sparse_bench.main(calls=10 if quick else 20)
+    parfor_bench.main(k=8 if quick else 16, repeats=2 if quick else 3)
     aggregate()
 
 

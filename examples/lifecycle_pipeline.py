@@ -82,9 +82,15 @@ def main():
     beta_sel, selected = steplm(X, Y, max_features=5, runtime=rt)
     print("steplm selected:", [meta.out_names[i] for i in selected])
 
-    # -- HPO sweep with lineage reuse (Fig. 5 workload)
+    # -- HPO sweep with lineage reuse (Fig. 5 workload).
+    # mode='sequential' pins the per-λ-plan + reuse-cache execution this
+    # section narrates; the default auto mode would compile the whole
+    # grid into one batched vmapped plan (see examples/parfor usage in
+    # README / benchmarks/parfor_bench.py) where gram/xtv never need
+    # the cache — computed once in the config-invariant prefix.
     lambdas = np.logspace(-3, 2, 12).tolist()
-    betas, losses = grid_search_lm(X, Y, lambdas, runtime=rt)
+    betas, losses = grid_search_lm(X, Y, lambdas, runtime=rt,
+                                   mode="sequential")
     best = int(np.argmin(losses))
     print(f"best lambda={lambdas[best]:.4f} "
           f"(cache hits so far: {rt.cache.stats.hits})")
@@ -92,7 +98,7 @@ def main():
     # -- cross-validation with fold-decomposed partial reuse (Fig. 7)
     fx, fy = make_folds(x, y, 5, seed=0)
     cv_betas, cv_errs = cross_validate_lm(fx, fy, reg=lambdas[best],
-                                          runtime=rt)
+                                          runtime=rt, mode="sequential")
     print("cv mse per fold:", np.round(cv_errs, 5))
     print("reuse stats:", rt.cache.stats.as_dict())
 

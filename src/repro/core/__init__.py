@@ -8,8 +8,10 @@ import jax as _jax
 _jax.config.update("jax_enable_x64", True)
 
 from . import ops  # noqa: F401,E402
+from .batching import (BatchedPlan, BatchingError,  # noqa: F401
+                       compile_batched)
 from .compiler import Plan, compile_plan  # noqa: F401
-from .dag import LTensor, input_tensor  # noqa: F401
+from .dag import LTensor, batch_input, input_tensor  # noqa: F401
 from .federated import (FederatedTensor, LocalSite,  # noqa: F401
                         federated_input)
 from .jit_cache import clear_jit_cache, get_jit_cache  # noqa: F401

@@ -148,8 +148,13 @@ def leaf_format(node: Node) -> str:
     """Physical format for an input leaf, from propagated estimates.
 
     Federated leaves are bound to `FederatedTensor` metadata objects,
-    not arrays — they never take a local physical format."""
+    not arrays — they never take a local physical format. Batched
+    leaves (`dag.batch_input`) bind stacked ``(k,)+shape`` arrays that
+    flow through `jax.vmap` as dense values — BCOO batch axes are not
+    supported on this path."""
     if node.placement != "local":
+        return DENSE
+    if node.attr("batch") is not None:
         return DENSE
     if (HAS_SPARSE and len(node.shape) == 2
             and node.sparsity < SPARSE_THRESHOLD

@@ -221,3 +221,89 @@ def collect_cost_s(fed_value: Node, n_sites: int) -> float:
     explicit boundary the placement pass inserts for non-lowerable
     consumers, and the baseline every `fed_*` lowering must beat."""
     return n_sites * FED_TRIP_S + _dense_bytes(fed_value) / NET_BW
+
+
+# ---------------------------------------------------------------------------
+# Task-parallel batched execution (§5 parfor): vmap-vs-sequential
+# arbitration for the config axis
+# ---------------------------------------------------------------------------
+
+# Control-program overhead per configuration on the sequential path: one
+# plan compile + leaf binding + per-segment python dispatch with a device
+# sync. Measured on the PR-3 grid-search loop this is a few hundred µs
+# per λ even with every heavy intermediate served from the reuse cache.
+PARFOR_DISPATCH_S = 300e-6
+
+# Memory ceiling for the vmapped config-variant suffix: every variant
+# intermediate is materialized `bucket` times at once, so giants must
+# fall back to the sequential loop instead of thrashing.
+VMAP_MEM_BUDGET = 1 << 30
+
+
+def _work_s(n: Node) -> float:
+    """Roofline term of one HOP (est_cost_s minus the launch constant)."""
+    return max(node_flops(n) / PEAK_FLOPS, node_bytes(n) / PEAK_BW)
+
+
+def batched_cost_s(invariant: list[Node], variant: list[Node],
+                   bucket: int) -> float:
+    """Estimated seconds for one batched (vmapped) execution.
+
+    The config-invariant prefix runs once at per-config size; every
+    config-variant instruction pays its launch constant ONCE but does
+    `bucket`× the per-config work (the batch axis is padded up to a
+    power-of-two bucket, so the padding waste is part of the estimate —
+    that is what lets a memory-bound giant lose to the sequential loop
+    when the bucket overshoots k).
+    """
+    total = PARFOR_DISPATCH_S  # one plan dispatch for the whole grid
+    for n in invariant:
+        total += est_cost_s(n)
+    for n in variant:
+        base = HEAVY_OP_BASE_S if n.op in HEAVY_OPS else LIGHT_OP_BASE_S
+        total += base + bucket * _work_s(n)
+    return total
+
+
+def sequential_cost_s(roots_list: list[list[Node]],
+                      reuse_active: bool) -> float:
+    """Estimated seconds for the PR-3 sequential path over k configs.
+
+    Walks every per-config DAG (post-rewrite, so reuse decompositions
+    like the CV fold grams are visible) and sums per-node estimates,
+    deduplicating across configs exactly where the sequential runtime
+    would: with an active reuse cache, a repeated intermediate whose
+    cost clears the probe threshold is served from the cache after its
+    first computation. Value identity is the lineage hash with
+    uid-based leaf identity — the same notion the cache keys on.
+    """
+    from .dag import _lhash_rec  # uid-keyed memo is shareable: uids are global
+    seen: set[str] = set()
+    memo: dict[int, str] = {}
+    total = len(roots_list) * PARFOR_DISPATCH_S
+    for roots in roots_list:
+        order: list[Node] = []
+        seen_uid: set[int] = set()
+
+        def rec(n: Node) -> None:
+            if n.uid in seen_uid:
+                return
+            seen_uid.add(n.uid)
+            for i in n.inputs:
+                rec(i)
+            order.append(n)
+
+        for r in roots:
+            rec(r)
+        for n in order:
+            if n.op in ("input", "literal"):
+                continue
+            h = _lhash_rec(n, {}, memo)
+            c = est_cost_s(n)
+            if h in seen:
+                if reuse_active and c >= PROBE_MIN_COST_S:
+                    continue  # cache hit on the sequential path
+            else:
+                seen.add(h)
+            total += c
+    return total

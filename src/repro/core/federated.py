@@ -43,11 +43,21 @@ import numpy as np
 
 @dataclass
 class ExchangeLog:
-    """Byte meter for master<->site traffic, with per-site attribution."""
+    """Byte meter for master<->site traffic, with per-site attribution.
+
+    Besides bytes, *exchange rounds* are counted: one round per
+    (federated instruction, site) — the latency unit of the federation
+    boundary. A task-parallel grid executed batched performs ONE round
+    per site per federated instruction regardless of the grid size k
+    (the stacked operand travels in one payload), where the sequential
+    loop performs k; `rounds_per_site` is how tests assert that.
+    """
 
     to_sites: int = 0      # bytes master -> workers
     from_sites: int = 0    # bytes workers -> master
     per_site: dict = field(default_factory=dict)  # site idx -> total bytes
+    rounds: int = 0        # (instruction, site) exchange round trips
+    rounds_per_site: dict = field(default_factory=dict)
 
     def add_out(self, arr, site: Optional[int] = None):
         nb = int(np.asarray(arr).nbytes)
@@ -61,15 +71,21 @@ class ExchangeLog:
         if site is not None:
             self.per_site[site] = self.per_site.get(site, 0) + nb
 
+    def add_round(self, site: int):
+        self.rounds += 1
+        self.rounds_per_site[site] = self.rounds_per_site.get(site, 0) + 1
+
     @property
     def total(self) -> int:
         return self.to_sites + self.from_sites
 
     def as_dict(self) -> dict:
         return dict(to_sites=self.to_sites, from_sites=self.from_sites,
-                    total=self.total,
+                    total=self.total, rounds=self.rounds,
                     per_site={int(k): int(v)
-                              for k, v in sorted(self.per_site.items())})
+                              for k, v in sorted(self.per_site.items())},
+                    rounds_per_site={int(k): int(v) for k, v in
+                                     sorted(self.rounds_per_site.items())})
 
 
 @dataclass
@@ -90,7 +106,8 @@ class LocalSite:
 
     data: Any  # np.ndarray or device array; rows × ncols partition
 
-    def execute(self, op: str, args: tuple, attrs: tuple = (), stats=None):
+    def execute(self, op: str, args: tuple, attrs: tuple = (), stats=None,
+                vmap_axes: Optional[tuple] = None):
         """Run one op over this site's data as a compiled segment.
 
         `args` is the *full* kernel argument tuple (the caller places
@@ -101,15 +118,28 @@ class LocalSite:
         (a `RuntimeStats`) receives the same accounting the fused
         segment executor books: compile seconds into `trace_time`, warm
         lookups into `jit_cache_hits`.
+
+        `vmap_axes` (batched `parfor` grids) maps the kernel over a
+        leading config axis of the flagged operands (`jax.vmap`
+        in_axes) — the site runs its local work for the WHOLE grid in
+        one compiled dispatch, so a k-configuration grid still touches
+        the site once per federated instruction.
         """
+        import jax
+
         from . import backend
         from .jit_cache import get_jit_cache
         cache = get_jit_cache()
         seg_key = f"fedsite|{op}|{attrs!r}"
+        if vmap_axes is not None:
+            seg_key += f"|vmap:{vmap_axes!r}"
         key, exe = cache.lookup(seg_key, args)
         if exe is None:
             kern = backend.get_kernel(op, dict(attrs))
-            exe, dt = cache.compile(key, lambda *xs: (kern(*xs),), args)
+            fn = lambda *xs: (kern(*xs),)  # noqa: E731
+            if vmap_axes is not None:
+                fn = jax.vmap(fn, in_axes=vmap_axes, out_axes=0)
+            exe, dt = cache.compile(key, fn, args)
             if stats is not None:
                 stats.trace_time += dt
         elif stats is not None:
@@ -188,6 +218,7 @@ class FederatedTensor:
             self.log.add_out(v, site=i)          # broadcast
             r = s.mv(v)
             self.log.add_in(r, site=i)           # collect
+            self.log.add_round(i)
             parts.append(r)
         return np.concatenate(parts, axis=0)
 
@@ -200,6 +231,7 @@ class FederatedTensor:
             self.log.add_out(vs, site=i)
             r = s.vm(vs)
             self.log.add_in(r, site=i)
+            self.log.add_round(i)
             out = r if out is None else out + r
         return out
 
@@ -212,6 +244,7 @@ class FederatedTensor:
         for i, s in enumerate(self.sites):
             g = s.gram()
             self.log.add_in(g, site=i)
+            self.log.add_round(i)
             out = g if out is None else out + g
         return out
 
@@ -223,6 +256,7 @@ class FederatedTensor:
             self.log.add_out(ys, site=i)
             r = s.xtv(ys)
             self.log.add_in(r, site=i)
+            self.log.add_round(i)
             out = r if out is None else out + r
         return out
 
@@ -232,6 +266,7 @@ class FederatedTensor:
         for i, s in enumerate(self.sites):
             r = s.colsums()
             self.log.add_in(r, site=i)
+            self.log.add_round(i)
             out = r if out is None else out + r
         return out
 

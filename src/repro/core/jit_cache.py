@@ -10,9 +10,18 @@ On a miss the segment closure is lowered ahead-of-time
 explicitly and replay calls skip dispatch-time signature checks; if AOT
 lowering is unavailable for some input combination we fall back to the
 plain `jax.jit` wrapper (which still caches by aval internally).
+
+The cache is bounded: LRU eviction on BOTH an entry cap and a resident
+code-byte cap (executable size from XLA's `memory_analysis` when
+available, a flat estimate otherwise), configurable via
+``REPRO_JIT_CACHE_ENTRIES`` / ``REPRO_JIT_CACHE_BYTES`` — long sessions
+sweeping many plan shapes (benchmark suites, growing `parfor` grids)
+stay at a bounded footprint, and eviction/hit/miss counters surface in
+`RuntimeStats.as_dict()['jit_cache']`.
 """
 from __future__ import annotations
 
+import os
 import time
 import warnings
 from collections import OrderedDict
@@ -26,6 +35,15 @@ try:
 except Exception:  # pragma: no cover
     _BCOO = ()
 
+# Defaults for the process-wide cache; overridable per-process via env
+# so benchmark drivers / services can pin their own budget.
+DEFAULT_CAPACITY = int(os.environ.get("REPRO_JIT_CACHE_ENTRIES", 512))
+DEFAULT_BYTE_CAPACITY = int(
+    os.environ.get("REPRO_JIT_CACHE_BYTES", 256 << 20))
+# Executables that expose no memory analysis are charged a flat size so
+# the byte cap still exerts pressure instead of silently unbounding.
+FALLBACK_EXE_BYTES = 64 << 10
+
 
 @dataclass
 class JitCacheStats:
@@ -33,11 +51,15 @@ class JitCacheStats:
     misses: int = 0
     trace_time: float = 0.0   # cumulative lower+compile seconds
     aot_fallbacks: int = 0    # segments served by plain jit (AOT failed)
+    evictions: int = 0        # entries dropped by the entry/byte caps
+    bytes_cached: int = 0     # resident generated-code bytes (estimate)
 
     def as_dict(self) -> dict:
         return dict(hits=self.hits, misses=self.misses,
                     trace_time_s=round(self.trace_time, 6),
-                    aot_fallbacks=self.aot_fallbacks)
+                    aot_fallbacks=self.aot_fallbacks,
+                    evictions=self.evictions,
+                    bytes_cached=self.bytes_cached)
 
 
 def arg_signature(args) -> tuple:
@@ -66,12 +88,33 @@ def arg_signature(args) -> tuple:
     return tuple(out)
 
 
-class JitProgramCache:
-    """LRU cache: (segment key, input signature) -> compiled executable."""
+def _exe_nbytes(exe: Any) -> int:
+    """Resident-size estimate of one compiled executable (generated
+    code; argument buffers are owned by the caller, not the cache)."""
+    try:
+        ma = exe.memory_analysis()
+        nb = int(getattr(ma, "generated_code_size_in_bytes", 0))
+        if nb > 0:
+            return nb
+    except Exception:
+        pass
+    return FALLBACK_EXE_BYTES
 
-    def __init__(self, capacity: int = 512):
+
+class JitProgramCache:
+    """LRU cache: (segment key, input signature) -> compiled executable.
+
+    Bounded by `capacity` entries AND `byte_capacity` resident code
+    bytes; the least-recently-used entries are evicted when either cap
+    is exceeded (`stats.evictions` / `stats.bytes_cached`)."""
+
+    def __init__(self, capacity: int = DEFAULT_CAPACITY,
+                 byte_capacity: int = DEFAULT_BYTE_CAPACITY):
         self.capacity = int(capacity)
-        self._entries: "OrderedDict[tuple, Callable]" = OrderedDict()
+        self.byte_capacity = int(byte_capacity)
+        # key -> (executable, code bytes)
+        self._entries: "OrderedDict[tuple, tuple[Callable, int]]" = \
+            OrderedDict()
         self.stats = JitCacheStats()
 
     def __len__(self) -> int:
@@ -80,11 +123,11 @@ class JitProgramCache:
     def lookup(self, seg_key: str, args) -> tuple[tuple, Optional[Callable]]:
         """Return (full key, executable-or-None); counts hit/miss."""
         key = (seg_key, arg_signature(args))
-        exe = self._entries.get(key)
-        if exe is not None:
+        entry = self._entries.get(key)
+        if entry is not None:
             self._entries.move_to_end(key)
             self.stats.hits += 1
-            return key, exe
+            return key, entry[0]
         self.stats.misses += 1
         return key, None
 
@@ -107,13 +150,30 @@ class JitProgramCache:
             exe = jitted
         dt = time.perf_counter() - t0
         self.stats.trace_time += dt
-        self._entries[key] = exe
-        if len(self._entries) > self.capacity:
-            self._entries.popitem(last=False)
+        nb = _exe_nbytes(exe)
+        old = self._entries.pop(key, None)
+        if old is not None:  # racing recompile of the same key
+            self.stats.bytes_cached -= old[1]
+        self._entries[key] = (exe, nb)
+        self.stats.bytes_cached += nb
+        self._evict()
         return exe, dt
+
+    def _evict(self) -> None:
+        while self._entries and (
+                len(self._entries) > self.capacity
+                or self.stats.bytes_cached > self.byte_capacity):
+            if len(self._entries) == 1:
+                # never evict the entry just inserted: a single
+                # over-budget executable is still the one we must run
+                break
+            _, (_, nb) = self._entries.popitem(last=False)
+            self.stats.bytes_cached -= nb
+            self.stats.evictions += 1
 
     def clear(self) -> None:
         self._entries.clear()
+        self.stats.bytes_cached = 0
 
 
 _global_cache: Optional[JitProgramCache] = None

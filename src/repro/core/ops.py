@@ -9,7 +9,7 @@ from typing import Sequence
 
 import numpy as np
 
-from .dag import LTensor, as_ltensor, make_node
+from .dag import LTensor, as_ltensor, batch_input, make_node
 
 __all__ = [
     "t", "matmul", "gram", "xtv", "rbind", "cbind", "solve", "cholesky",
@@ -17,8 +17,14 @@ __all__ = [
     "colSums", "rowSums", "colMeans", "rowMeans", "colVars", "colMaxs",
     "colMins", "nnz", "exp", "log", "sqrt", "abs_", "sign", "sigmoid",
     "round_", "minimum", "maximum", "where", "ones", "zeros", "full", "eye",
-    "rand", "seq", "replace_nan", "cumsum", "quantile",
+    "rand", "seq", "replace_nan", "cumsum", "quantile", "batch_input",
 ]
+
+# `batch_input` (re-exported from `dag`) is the §5 task-parallel config
+# axis: a leaf whose node has the per-config element shape while the
+# binding is the stacked (k, ...) array — the batching pass
+# (`repro.core.batching`) hoists varying literals/leaves into these,
+# and `LineageRuntime.evaluate_batch` vmaps their consumers.
 
 
 # -- structural -------------------------------------------------------------

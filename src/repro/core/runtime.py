@@ -41,6 +41,7 @@ class RuntimeStats:
     reused: int = 0
     exec_time: float = 0.0
     segments: int = 0        # segments dispatched on the fused path
+    batched_segments: int = 0  # config-variant segments run under vmap
     jit_cache_hits: int = 0  # warm compiled-executable lookups
     trace_time: float = 0.0  # seconds spent tracing+compiling segments
     # bytes crossing the federation boundary (fed_* / collect
@@ -54,11 +55,38 @@ class RuntimeStats:
         out = dict(instructions=self.instructions, executed=self.executed,
                    reused=self.reused, exec_time_s=round(self.exec_time, 6),
                    segments=self.segments,
+                   batched_segments=self.batched_segments,
                    jit_cache_hits=self.jit_cache_hits,
                    trace_time_s=round(self.trace_time, 6))
         if self.exchange.total:
             out["exchange"] = self.exchange.as_dict()
+        # the process-wide compiled-executable cache: hit/miss/eviction
+        # counters + resident bytes, surfaced here so long-running
+        # sessions can watch cache pressure alongside runtime counters
+        out["jit_cache"] = get_jit_cache().stats.as_dict()
         return out
+
+
+@dataclass
+class _BatchCtx:
+    """Execution context of a batched (`parfor`) plan: which value uids
+    carry the leading config axis, and how wide the padded axis is."""
+
+    bplan: Any                 # repro.core.batching.BatchedPlan
+    batch: int                 # true number of configurations (k)
+    bucket: int                # padded batch width (power-of-two)
+    bvals: frozenset           # uids with a leading batch axis
+
+
+def _pad_axis0(arr, bucket: int):
+    """Re-pad a true-k host/federated result back to the bucket width
+    (repeating the last config, like `batching.pad_batch`) so it slots
+    into downstream vmapped executables compiled for the bucket."""
+    import jax.numpy as jnp
+    pad = bucket - arr.shape[0]
+    if pad <= 0:
+        return arr
+    return jnp.concatenate([arr, jnp.repeat(arr[-1:], pad, axis=0)])
 
 
 class LineageRuntime:
@@ -107,6 +135,45 @@ class LineageRuntime:
         return [backend.to_numpy(values[i]) for i in plan.output_ids]
 
     # ------------------------------------------------------------------
+    def evaluate_batch(self, bplan) -> list[list[np.ndarray]]:
+        """Execute a `BatchedPlan` (see `repro.core.batching`): the
+        config-invariant prefix runs once through the ordinary segment
+        machinery (same executables, same reuse probes as single-config
+        plans), config-variant segments run vmapped over the padded
+        batch axis. Returns one output list per configuration, in grid
+        order, padding sliced off.
+
+        Batched execution is inherently fused — the vmapped suffix IS a
+        jit segment — so this path is used regardless of `self.fuse`
+        (the interpreter equivalent of a batched plan is the sequential
+        per-config loop, which `parfor` falls back to).
+        """
+        from .batching import pad_batch
+        plan = bplan.plan
+        bctx = _BatchCtx(bplan=bplan, batch=bplan.batch,
+                         bucket=bplan.bucket,
+                         bvals=bplan.batched_value_uids)
+        leaf_values = {
+            uid: pad_batch(np.asarray(LEAVES.values[uid]), bplan.bucket)
+            for uid in bplan.batched_leaf_uids}
+        values, lin = self._bind_leaves(plan, leaf_values, None)
+        self._run_segments(plan, values, lin, bctx=bctx)
+        k = bplan.batch
+        per_config: list[list[np.ndarray]] = [[] for _ in range(k)]
+        for uid in plan.output_ids:
+            arr = backend.to_numpy(values[uid])
+            if uid in bctx.bvals:
+                for j in range(k):
+                    per_config[j].append(arr[j])
+            else:
+                # config-invariant output: every config gets its own
+                # copy, matching the sequential path's independent
+                # arrays (callers may mutate results in place)
+                for j in range(k):
+                    per_config[j].append(arr if j == 0 else arr.copy())
+        return per_config
+
+    # ------------------------------------------------------------------
     def _bind_leaves(self, plan: Plan,
                      leaf_values: Optional[dict[int, Any]],
                      leaf_lineage: Optional[dict[int, str]]
@@ -145,7 +212,13 @@ class LineageRuntime:
                     values[inp.uid] = arr
         for r in plan.roots:  # outputs that are themselves leaves
             if r.op == "input" and r.uid not in values:
-                values[r.uid] = (leaf_values or LEAVES.values)[r.uid]
+                # overrides first, registry fallback: a partial
+                # leaf_values dict (batched leaves only, see
+                # evaluate_batch) must not shadow ordinary leaves
+                if leaf_values and r.uid in leaf_values:
+                    values[r.uid] = leaf_values[r.uid]
+                else:
+                    values[r.uid] = LEAVES.values[r.uid]
         return values, lin
 
     # ------------------------------------------------------------------
@@ -191,19 +264,30 @@ class LineageRuntime:
 
     # ------------------------------------------------------------------
     def _run_segments(self, plan: Plan, values: dict[int, Any],
-                      lin: dict[int, str]) -> None:
+                      lin: dict[int, str],
+                      bctx: Optional[_BatchCtx] = None) -> None:
         """Segment executor: maximal fusable runs replayed through cached
         jit executables. With an active reuse cache, probe points are
         segment-final (see segments.py): the cache is probed before a
         probe-final segment runs — a hit skips the whole segment — and
-        populated from its output afterwards."""
+        populated from its output afterwards.
+
+        With a `_BatchCtx` (batched `parfor` plans), segmentation is
+        variance-aware and config-variant segments execute as
+        `jax.vmap`-wrapped executables over the padded batch axis —
+        cached under a vmap-tagged key so they never collide with the
+        unbatched executable of the same segment body."""
         reuse = self.cache is not None
-        segments = plan.segments_for(reuse)
+        segments = (bctx.bplan.segments_for(reuse) if bctx is not None
+                    else plan.segments_for(reuse))
         fmts = plan.formats_for(self.sparse_inputs)
         jcache = get_jit_cache()
         lmemo: dict[int, str] = {}
         for seg in segments:
+            batched = bctx is not None and seg.variant
             self.stats.segments += 1
+            if batched:
+                self.stats.batched_segments += 1
             self.stats.instructions += len(seg.instructions)
             last = seg.instructions[-1]
             args = [values[u] for u in seg.input_uids]
@@ -215,7 +299,11 @@ class LineageRuntime:
             if fmts and any(u in fmts for u in boundary):
                 fsig = ",".join(fmts.get(u, backend.DENSE)
                                 for u in boundary)
-                seg_key = f"{seg.key}|f:{fsig}"
+                seg_key = f"{seg_key}|f:{fsig}"
+            if batched:
+                axes = "".join("0" if u in bctx.bvals else "-"
+                               for u in seg.input_uids)
+                seg_key = f"{seg_key}|vmap:{axes}"
             lhash = None
             if reuse and last.probe:
                 lhash = _lhash_rec(last.node, lin, lmemo)
@@ -231,9 +319,10 @@ class LineageRuntime:
                         # executable — the segment minus the probe value
                         # and everything only it needed — mirroring what
                         # the interpreter computes after the same hit
-                        self._run_compensation(seg, seg_key, fmts, args,
-                                               rest, last.out_id, jcache,
-                                               values)
+                        self._run_compensation(
+                            seg, seg_key, fmts, args, rest, last.out_id,
+                            jcache, values,
+                            bctx=bctx if batched else None)
                     self._free(values, seg.frees)
                     continue
             if last.node.op in backend.NON_TRACEABLE_OPS:
@@ -244,7 +333,8 @@ class LineageRuntime:
                 # and meter the exchange; other host ops (quantile) run
                 # their kernel eagerly, outside any jit trace
                 t0, tt0 = time.perf_counter(), self.stats.trace_time
-                out = self._exec_one(last, values, fmts)
+                out = self._exec_one(last, values, fmts,
+                                     bctx=bctx if batched else None)
                 # per-site compiles booked into trace_time by
                 # LocalSite.execute; exec_time gets the rest
                 self.stats.exec_time += (time.perf_counter() - t0
@@ -252,10 +342,9 @@ class LineageRuntime:
                 outs = (out,)
                 self.stats.executed += 1
             else:
-                from .segments import build_segment_fn
                 outs = self._execute_cached(
-                    seg_key, lambda: build_segment_fn(seg, fmts), args,
-                    jcache)
+                    seg_key, self._seg_builder(seg, fmts, bctx if batched
+                                               else None), args, jcache)
                 self.stats.executed += len(seg.instructions)
             for uid, val in zip(seg.output_uids, outs, strict=True):
                 values[uid] = val
@@ -265,6 +354,20 @@ class LineageRuntime:
                 self.cache.put(lhash, values[last.out_id],
                                last.est_cost_s, gated=False)
             self._free(values, seg.frees)
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def _seg_builder(seg, fmts: dict, bctx: Optional[_BatchCtx],
+                     drop_output: Optional[int] = None):
+        """Deferred segment-closure builder (only called on a jit-cache
+        miss): plain for invariant segments, vmap-wrapped for
+        config-variant ones."""
+        from .segments import build_batched_segment_fn, build_segment_fn
+        if bctx is None:
+            return lambda: build_segment_fn(seg, fmts,
+                                            drop_output=drop_output)
+        return lambda: build_batched_segment_fn(seg, fmts, bctx.bvals,
+                                                drop_output=drop_output)
 
     # ------------------------------------------------------------------
     def _execute_cached(self, seg_key: str, build_fn, args, jcache):
@@ -286,14 +389,14 @@ class LineageRuntime:
     # ------------------------------------------------------------------
     def _run_compensation(self, seg, seg_key: str, fmts: dict, args,
                           rest: tuple, probe_uid: int, jcache,
-                          values: dict[int, Any]) -> None:
+                          values: dict[int, Any],
+                          bctx: Optional[_BatchCtx] = None) -> None:
         """Execute a probe-hit segment's remaining outputs (the segment
         with the cached value dead-code eliminated); see
         `segments.build_segment_fn(drop_output=...)`."""
-        from .segments import build_segment_fn
         outs = self._execute_cached(
             f"{seg_key}|comp",
-            lambda: build_segment_fn(seg, fmts, drop_output=probe_uid),
+            self._seg_builder(seg, fmts, bctx, drop_output=probe_uid),
             args, jcache)
         # interpreter-equivalent accounting: it would execute every
         # instruction except the one reused (DCE may drop more)
@@ -302,27 +405,49 @@ class LineageRuntime:
             values[uid] = val
 
     # ------------------------------------------------------------------
-    def _exec_one(self, ins, values: dict[int, Any], fmts: dict):
+    def _exec_one(self, ins, values: dict[int, Any], fmts: dict,
+                  bctx: Optional[_BatchCtx] = None):
         """Execute one instruction eagerly on concrete values — the
         single implementation shared by the interpreter loop and the
         segment executor's host path (non-traceable singleton
         segments), so cross-mode parity cannot erode: federated ops
         route to the site orchestrator, everything else runs its
-        registry kernel with a device sync."""
+        registry kernel with a device sync.
+
+        `bctx` (batched plans) marks operands carrying the config axis:
+        federated ops take their batched path (one exchange round for
+        the whole grid), other host ops (quantile) loop over the batch
+        on the host — they are order-statistics on concrete values and
+        cannot vmap."""
         node = ins.node
         if node.op in backend.FED_OPS or node.op == backend.COLLECT_OP:
-            return self._exec_federated(ins, values)
+            return self._exec_federated(ins, values, bctx=bctx)
         kern = backend.kernel_for_node(
             node,
             in_fmts=tuple(fmts.get(u, backend.DENSE)
                           for u in ins.input_ids),
             out_fmt=fmts.get(ins.out_id, backend.DENSE))
+        if bctx is not None:
+            import jax.numpy as jnp
+            bpos = {i for i, u in enumerate(ins.input_ids)
+                    if u in bctx.bvals}
+            args = [values[u] for u in ins.input_ids]
+            # host ops loop over the TRUE k, not the padded bucket —
+            # padding configs duplicate the last one, so their result
+            # is re-padded in, never recomputed
+            rows = [kern(*[a[j] if i in bpos else a
+                           for i, a in enumerate(args)])
+                    for j in range(bctx.batch)]
+            out = _pad_axis0(jnp.stack(rows, axis=0), bctx.bucket)
+            backend.block_ready(out)
+            return out
         out = kern(*[values[u] for u in ins.input_ids])
         backend.block_ready(out)
         return out
 
     # ------------------------------------------------------------------
-    def _exec_federated(self, ins, values: dict[int, Any]):
+    def _exec_federated(self, ins, values: dict[int, Any],
+                        bctx: Optional[_BatchCtx] = None):
         """Execute one federated instruction (or a `collect` boundary).
 
         Master-side orchestration: loop over sites, run each site's
@@ -330,12 +455,23 @@ class LineageRuntime:
         kernel registry + process-wide jit cache, so per-site gram runs
         the same Pallas/BCOO kernels as local plans and repeated runs
         replay warm executables), and meter every byte crossing the
-        federation boundary into `stats.exchange`, per site.
+        federation boundary into `stats.exchange`, per site. Every
+        (instruction, site) pair that actually exchanges bytes counts
+        one *round* (`ExchangeLog.add_round`).
+
+        With a `_BatchCtx`, batched *local* operands (fed operands are
+        never batched — `batching.choose_mode` guarantees it) travel as
+        ONE stacked payload per site and the site's work runs vmapped
+        over the config axis: a k-configuration grid costs one round
+        per site per instruction, not k.
         """
         node = ins.node
         op = node.op
         log = self.stats.exchange
         args = [values[u] for u in ins.input_ids]
+        bpos = (frozenset(i for i, u in enumerate(ins.input_ids)
+                          if u in bctx.bvals)
+                if bctx is not None else frozenset())
 
         if op == backend.COLLECT_OP:
             fed = args[0]
@@ -343,6 +479,7 @@ class LineageRuntime:
             parts = []
             for i, s in enumerate(fed.sites):
                 log.add_in(s.data, site=i)
+                log.add_round(i)
                 parts.append(np.asarray(s.data))
             return np.concatenate(parts, axis=0)
 
@@ -353,20 +490,32 @@ class LineageRuntime:
             for i, s in enumerate(fed.sites):
                 g = s.execute("gram", (s.data,), stats=self.stats)
                 log.add_in(g, site=i)
+                log.add_round(i)
                 out = g if out is None else out + g
             return out
 
         if op in ("fed_xtv", "fed_vm"):
             # x^T v with any subset of {x, v} federated: per-site
             # partial products summed at the master; row-aligned local
-            # operands are sent sliced (only the relevant rows travel)
+            # operands are sent sliced (only the relevant rows travel).
+            # Batched local operands are sliced along the row axis of
+            # each config: v[:, a:b] — one stacked send per site.
             fed_pos = set(node.attr("fed_args", (0,)))
             fed = args[min(fed_pos)]
             fed._require_sites(op)
             self._check_alignment(op, [args[p] for p in sorted(fed_pos)])
-            # densify local operands once, outside the site loop
-            args = [v if pos in fed_pos else backend.densify(v)
+            # densify local operands once, outside the site loop; a
+            # batched operand is sliced to the TRUE k before anything
+            # crosses the wire — the bucket padding (duplicates of the
+            # last config) exists only to stabilize executable shapes,
+            # and must not inflate the exchange
+            args = [v if pos in fed_pos else
+                    (backend.densify(v)[:bctx.batch] if pos in bpos
+                     else backend.densify(v))
                     for pos, v in enumerate(args)]
+            vmap_axes = (tuple(0 if pos in bpos else None
+                               for pos in range(len(args)))
+                         if bpos else None)
             out = None
             for i, (a, b) in enumerate(fed.ranges):
                 site_args = []
@@ -374,26 +523,37 @@ class LineageRuntime:
                     if pos in fed_pos:
                         site_args.append(v.sites[i].data)
                     else:
-                        sl = v[a:b]
+                        sl = v[:, a:b] if pos in bpos else v[a:b]
                         log.add_out(sl, site=i)
                         site_args.append(sl)
                 r = fed.sites[i].execute("xtv", tuple(site_args),
-                                         stats=self.stats)
+                                         stats=self.stats,
+                                         vmap_axes=vmap_axes)
                 log.add_in(r, site=i)
+                log.add_round(i)
                 out = r if out is None else out + r
-            return out
+            return _pad_axis0(out, bctx.bucket) if bpos else out
 
         if op == "fed_mv":
             fed, w = args
             fed._require_sites(op)
             w = backend.densify(w)
+            batched = 1 in bpos
+            if batched:  # send the true k configs, never the padding
+                w = w[:bctx.batch]
+            vmap_axes = (None, 0) if batched else None
             parts = []
             for i, s in enumerate(fed.sites):
-                log.add_out(w, site=i)  # broadcast
-                r = s.execute("matmul", (s.data, w), stats=self.stats)
+                log.add_out(w, site=i)  # broadcast (whole grid at once)
+                r = s.execute("matmul", (s.data, w), stats=self.stats,
+                              vmap_axes=vmap_axes)
                 log.add_in(r, site=i)   # rbind of per-site results
+                log.add_round(i)
                 parts.append(np.asarray(r))
-            return np.concatenate(parts, axis=0)
+            # per-site results are (rows_i, n) — or (k, rows_i, n)
+            # batched — so the row concat axis shifts with the batch
+            out = np.concatenate(parts, axis=1 if batched else 0)
+            return _pad_axis0(out, bctx.bucket) if batched else out
 
         if op == "fed_colsums":
             fed = args[0]
@@ -402,10 +562,15 @@ class LineageRuntime:
             for i, s in enumerate(fed.sites):
                 r = s.execute("colSums", (s.data,), stats=self.stats)
                 log.add_in(r, site=i)
+                log.add_round(i)
                 out = r if out is None else out + r
             return out
 
         if op == "fed_map":
+            if bpos:
+                raise NotImplementedError(
+                    "fed_map with a batched operand has no vmapped "
+                    "path; batching.choose_mode must fall back")
             return self._exec_fed_map(node, args, log)
 
         raise NotImplementedError(f"federated op {op!r}")
@@ -436,6 +601,7 @@ class LineageRuntime:
         new_sites = []
         for i, (a, b) in enumerate(fed.ranges):
             rows_i = b - a
+            sent = False
             ia = dict(iattrs)
             if inner == "slice":
                 # rebase the absolute row range onto this site's rows
@@ -456,11 +622,17 @@ class LineageRuntime:
                     if shp == () or shp[0] == 1:
                         if shp != ():
                             log.add_out(v, site=i)  # broadcast row
+                            sent = True
                         site_args.append(v)
                     else:
                         sl = v[a:b]
                         log.add_out(sl, site=i)
+                        sent = True
                         site_args.append(sl)
+            if sent:
+                # purely on-site fed_map work (generators, fed
+                # operands) exchanges nothing and counts no round
+                log.add_round(i)
             out_i = fed.sites[i].execute(
                 inner, tuple(site_args), attrs=tuple(sorted(ia.items())),
                 stats=self.stats)

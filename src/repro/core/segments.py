@@ -28,6 +28,12 @@ Segment boundaries are forced by:
     `fed_*` site-orchestration ops, `collect` exchange boundaries, and
     host ops like `quantile`) runs in its own segment, outside any jit
     trace; the runtime executes those eagerly on the host path
+  * config-variance flips — for batched plans (`repro.core.batching`),
+    instructions whose value carries the batch axis (`variant_uids`)
+    never share a segment with config-invariant ones: the invariant
+    prefix compiles to ordinary executables (shared with single-config
+    plans via the jit cache) and is computed ONCE per grid, while
+    variant segments are wrapped in `jax.vmap` by the runtime
 
 Each segment carries a *canonical structural key*: `dag.structural_key`
 computed with segment inputs pre-seeded positionally, so two segments
@@ -63,6 +69,7 @@ class Segment:
     frees: tuple[int, ...]        # uids dead after this segment
     target: str                   # 'local' | 'distributed' | 'federated'
     key: str                      # canonical structural hash
+    variant: bool = False         # carries the config batch axis (vmapped)
 
     @property
     def fused(self) -> bool:
@@ -95,11 +102,23 @@ def _segment_key(instructions, input_uids, output_positions,
         f"seg1|{target}|{body}|outs={outs}".encode()).hexdigest()
 
 
-def segment_plan(plan: "Plan", reuse_active: bool) -> list[Segment]:
-    """Partition `plan.instructions` into segments (pure, static)."""
+def segment_plan(plan: "Plan", reuse_active: bool,
+                 variant_uids: Optional[frozenset[int]] = None
+                 ) -> list[Segment]:
+    """Partition `plan.instructions` into segments (pure, static).
+
+    `variant_uids` (batched plans only) forces boundaries where the
+    config-variance of adjacent instructions differs — target-neutral
+    scalar generators still join either side; inside a vmapped segment
+    they trace unbatched, so letting them ride along costs nothing."""
+    def is_var(ins) -> bool:
+        return variant_uids is not None and ins.out_id in variant_uids
+
     groups: list[list] = []
     group_targets: list[str] = []
+    group_variant: list[bool] = []
     cur_target: Optional[str] = None  # None while the group is all-neutral
+    cur_variant: Optional[bool] = None
     for ins in plan.instructions:
         neutral = _target_neutral(ins)
         start_new = (
@@ -110,16 +129,24 @@ def segment_plan(plan: "Plan", reuse_active: bool) -> list[Segment]:
             or groups[-1][-1].node.op in backend.NON_TRACEABLE_OPS
             or ins.node.op in backend.NON_TRACEABLE_OPS
             or (not neutral and cur_target is not None
-                and ins.target != cur_target))
+                and ins.target != cur_target)
+            or (not neutral and cur_variant is not None
+                and is_var(ins) != cur_variant))
         if start_new:
             groups.append([ins])
             group_targets.append(ins.target)
+            group_variant.append(is_var(ins))
             cur_target = None if neutral else ins.target
+            cur_variant = None if neutral else is_var(ins)
         else:
             groups[-1].append(ins)
             if not neutral and cur_target is None:
                 cur_target = ins.target
                 group_targets[-1] = ins.target
+            if not neutral and cur_variant is None:
+                cur_variant = is_var(ins)
+            if is_var(ins):
+                group_variant[-1] = True
 
     consumer_segs: dict[int, set[int]] = {}
     for si, group in enumerate(groups):
@@ -166,7 +193,8 @@ def segment_plan(plan: "Plan", reuse_active: bool) -> list[Segment]:
             frees=tuple(frees),
             target=group_targets[si],
             key=_segment_key(group, input_uids, output_positions,
-                             group_targets[si])))
+                             group_targets[si]),
+            variant=group_variant[si]))
     return segments
 
 
@@ -216,3 +244,24 @@ def build_segment_fn(seg: Segment, formats: Optional[dict] = None,
         return tuple(env[u] for u in out_uids)
 
     return run
+
+
+def build_batched_segment_fn(seg: Segment, formats: Optional[dict],
+                             batched_uids: frozenset,
+                             drop_output: Optional[int] = None):
+    """Lower a config-variant segment to one `jax.vmap`-wrapped closure.
+
+    Inputs carrying the batch axis (batched leaves and earlier variant
+    segment outputs — `batched_uids`) map over axis 0; config-invariant
+    inputs broadcast (`in_axes=None`), so the prefix's gram/xtv is
+    traced once and shared across the whole batch inside the executable.
+    Outputs mirror the same split. The result is jit-compiled through
+    the ordinary jit cache (with a vmap-tagged key, see the runtime).
+    """
+    import jax
+    fn = build_segment_fn(seg, formats, drop_output=drop_output)
+    out_uids = tuple(u for u in seg.output_uids if u != drop_output)
+    in_axes = tuple(0 if u in batched_uids else None
+                    for u in seg.input_uids)
+    out_axes = tuple(0 if u in batched_uids else None for u in out_uids)
+    return jax.vmap(fn, in_axes=in_axes, out_axes=out_axes)

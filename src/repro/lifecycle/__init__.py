@@ -4,7 +4,8 @@ DML-bodied builtin analogues, written on the lineage-traced DSL so the
 compiler rewrites + reuse cache optimize across lifecycle tasks."""
 from .regression import (lm, lmCG, lmDS, lmDS_federated,  # noqa: F401
                          steplm, steplm_federated)
-from .validation import cross_validate_lm, grid_search_lm  # noqa: F401
+from .validation import (cross_validate_lm, grid_search_lm,  # noqa: F401
+                         parfor)
 from .cleaning import (impute_by_mean, impute_by_median, mice_lite,  # noqa: F401
                        outlier_by_iqr, outlier_by_sd, scale_matrix,
                        winsorize)
