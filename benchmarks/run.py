@@ -20,6 +20,11 @@ Prints ``name,us_per_call,derived`` CSV lines.
                           fused-segment stack vs the sequential-reuse
                           loop, plus federated exchange-round invariants
                           (BENCH_parfor.json)
+  distributed_*         — ISSUE 6: shard_map-lowered segments on a
+                          forced 8-device host mesh (data-parallel lmDS
+                          + config-sharded grid) vs the local fused
+                          baseline, parity asserted
+                          (BENCH_distributed.json)
 
 Every run ends with a summary table aggregating the latest entry of all
 ``BENCH_*.json`` trajectories.
@@ -75,7 +80,8 @@ def aggregate() -> None:
                 f"{k.replace('_us_per_call', '')}={v}us" if
                 k.endswith("_us_per_call") else f"{k}={v}"
                 for k, v in entry.items()
-                if k.endswith("_us_per_call") or k.startswith("speedup"))
+                if k.endswith("_us_per_call") or k.endswith("speedup")
+                or k == "devices")
             rows.append((name,
                          str(entry.get("benchmark", "?")),
                          str(entry.get("workload", ""))[:46],
@@ -98,8 +104,8 @@ def aggregate() -> None:
 
 def main() -> None:
     if "--smoke" in sys.argv:
-        from benchmarks import (federated_bench, fusion_bench,
-                                parfor_bench, sparse_bench)
+        from benchmarks import (distributed_bench, federated_bench,
+                                fusion_bench, parfor_bench, sparse_bench)
         print("name,us_per_call,derived")
         fusion_bench.main(rows=500, cols=32, calls=20, repeats=2)
         sparse_bench.main(rows=512, cols=64, calls=10, repeats=2)
@@ -109,11 +115,13 @@ def main() -> None:
                              eager_layer=False)
         parfor_bench.main(rows=2048, cols=64, k=16, repeats=2,
                           fed_rows=1024, fed_cols=32)
+        distributed_bench.main(rows=8192, cols=64, k=8, repeats=2)
         aggregate()
         return
-    from benchmarks import (cv_reuse, federated_bench, fusion_bench,
-                            hpo_baseline, hpo_reuse, kernel_bench,
-                            parfor_bench, roofline_bench, sparse_bench)
+    from benchmarks import (cv_reuse, distributed_bench, federated_bench,
+                            fusion_bench, hpo_baseline, hpo_reuse,
+                            kernel_bench, parfor_bench, roofline_bench,
+                            sparse_bench)
     quick = "--quick" in sys.argv
     ks = (1, 5, 10) if quick else (1, 5, 10, 20)
     print("name,us_per_call,derived")
@@ -126,6 +134,8 @@ def main() -> None:
     fusion_bench.main(calls=20 if quick else 50)
     sparse_bench.main(calls=10 if quick else 20)
     parfor_bench.main(k=8 if quick else 16, repeats=2 if quick else 3)
+    distributed_bench.main(k=8 if quick else 16,
+                           repeats=2 if quick else 3)
     aggregate()
 
 

@@ -308,6 +308,28 @@ FED_OPS: frozenset[str] = frozenset({
 # exchanged) so non-lowerable consumers can run locally.
 COLLECT_OP = "collect"
 
+# Sharded instructions (the paper's distributed backend as a compiler
+# placement): generated by `repro.core.compiler.lower_distributed` when
+# a device mesh is attached. Partial-reduction ops compute per-shard on
+# the row-sharded operand and `psum` over the mesh's `data` axis;
+# `reshard` is the explicit, cost-gated boundary materializing a
+# row-sharded value as a replicated one (`all_gather`). They only ever
+# trace inside a `jax.shard_map`-wrapped segment
+# (`segments.build_sharded_segment_fn`); on hosts without enough
+# devices — and on the per-instruction interpreter, which holds global
+# arrays — `kernel_for_node(..., unshard=True)` swaps each for its
+# local equivalent (`SHARD_BASE_OPS`), which is the 3-way parity oracle.
+SHARD_REDUCE_OPS: frozenset[str] = frozenset({
+    "shard_gram", "shard_xtv", "shard_colsums", "shard_sum",
+})
+RESHARD_OP = "reshard"
+SHARD_EXEC_OPS: frozenset[str] = SHARD_REDUCE_OPS | {RESHARD_OP}
+# local-equivalent op per shard op (None: identity)
+SHARD_BASE_OPS: dict[str, Optional[str]] = {
+    "shard_gram": "gram", "shard_xtv": "xtv",
+    "shard_colsums": "colSums", "shard_sum": "sum", RESHARD_OP: None,
+}
+
 # Ops that must never be traced into a fused jit segment (data-dependent
 # python control flow, host side effects, dynamic output shapes). The
 # segmenter isolates them into single-instruction segments which the
@@ -455,6 +477,42 @@ if HAS_SPARSE:
         lambda attrs: (lambda s, x: _bcoo_map(lambda d: s * d)(x)))
 
 
+# -- sharded (shard_map) kernel variants -------------------------------------
+# Pure jax collectives over the mesh axis carried in the node attrs;
+# valid only inside a shard_map trace (the sharded segment builder).
+
+@register_kernel("shard_gram")
+def _build_shard_gram(attrs):
+    axis = attrs.get("axis", "data")
+    return lambda x: jax.lax.psum(_gram(x), axis)
+
+
+@register_kernel("shard_xtv")
+def _build_shard_xtv(attrs):
+    axis = attrs.get("axis", "data")
+    return lambda x, v: jax.lax.psum(_xtv(x, v), axis)
+
+
+@register_kernel("shard_colsums")
+def _build_shard_colsums(attrs):
+    axis = attrs.get("axis", "data")
+    return lambda x: jax.lax.psum(
+        jnp.sum(densify(x), axis=0, keepdims=True), axis)
+
+
+@register_kernel("shard_sum")
+def _build_shard_sum(attrs):
+    axis = attrs.get("axis", "data")
+    return lambda x: jax.lax.psum(jnp.sum(densify(x)), axis)
+
+
+@register_kernel(RESHARD_OP)
+def _build_reshard(attrs):
+    axis = attrs.get("axis", "data")
+    return lambda x: jax.lax.all_gather(densify(x), axis, axis=0,
+                                        tiled=True)
+
+
 @register_kernel("cholesky")
 def _build_cholesky(attrs):
     return lambda x: jnp.linalg.cholesky(densify(x).astype(jnp.float64))
@@ -573,19 +631,29 @@ def _build_rand(attrs):
 
 @lru_cache(maxsize=4096)
 def _kernel_cached(op: str, attrs: tuple, shape: tuple,
-                   in_fmts: Optional[tuple], out_fmt: str) -> KernelFn:
+                   in_fmts: Optional[tuple], out_fmt: str,
+                   unshard: bool = False) -> KernelFn:
+    if unshard and op in SHARD_BASE_OPS:
+        base = SHARD_BASE_OPS[op]
+        if base is None:  # reshard of a global array is the identity
+            return lambda x: densify(x)
+        op = base
     d = dict(attrs)
     d["_shape"] = shape
     return get_kernel(op, d, in_fmts=in_fmts, out_fmt=out_fmt)
 
 
 def kernel_for_node(node, in_fmts: Optional[tuple[str, ...]] = None,
-                    out_fmt: str = DENSE) -> KernelFn:
+                    out_fmt: str = DENSE, unshard: bool = False) -> KernelFn:
     """Memoized kernel lookup for a HOP node — kernels depend only on
     (op, attrs, shape, formats), so repeated plan executions (the
     interpreter loop, segment lowering) reuse one closure instead of
-    rebuilding."""
-    return _kernel_cached(node.op, node.attrs, node.shape, in_fmts, out_fmt)
+    rebuilding. `unshard=True` swaps `shard_*`/`reshard` collectives
+    for their local equivalents (`SHARD_BASE_OPS`) — the interpreter
+    and the no-mesh fallback hold *global* arrays, for which the
+    per-shard compute + collective is exactly the base op."""
+    return _kernel_cached(node.op, node.attrs, node.shape, in_fmts,
+                          out_fmt, unshard)
 
 
 def execute_op(op: str, attrs: dict[str, Any], inputs: list) -> Any:

@@ -190,7 +190,12 @@ class BatchedPlan:
     bucket: int                      # padded batch size (power of two)
     batched_leaf_uids: frozenset[int]
     variant_uids: frozenset[int]
-    mode: str = "vmap"               # 'vmap' | 'sequential' (cost-chosen)
+    # 'vmap' | 'sequential' | 'shard' (cost-chosen); 'shard' splits the
+    # bucket axis over the device mesh's `config` axis — each device
+    # vmaps over bucket/c configurations (see
+    # `segments.build_config_sharded_segment_fn`), degrading to plain
+    # vmap at runtime when the mesh cannot be realized
+    mode: str = "vmap"
     _segments: dict = field(default_factory=dict, repr=False)
 
     @property
@@ -309,21 +314,24 @@ def compile_batched(config_outputs: Sequence[Sequence[LTensor]], *,
 # Cost-model arbitration: vmapped batch vs sequential-reuse loop
 # ---------------------------------------------------------------------------
 
-# fed_* instructions with a batched-local-operand execution path in the
-# runtime (one stacked exchange per site instead of k round trips).
-BATCHABLE_FED_OPS = frozenset({"fed_mv", "fed_xtv", "fed_vm"})
+# fed_* instructions (and the collect boundary) with a batched
+# execution path in the runtime: batched local operands travel as one
+# stacked exchange per site instead of k round trips, and batched
+# fed_map outputs carry the stacked (k, rows_i, c) site layout that the
+# other instructions' vmapped site work consumes.
+BATCHABLE_FED_OPS = frozenset({"fed_mv", "fed_xtv", "fed_vm", "fed_map",
+                               "fed_gram", "fed_colsums", "collect"})
 
 
 def choose_mode(bplan: BatchedPlan,
                 roots_list: Sequence[Sequence[Node]],
                 reuse_active: bool,
                 sparse_inputs: bool = False) -> str:
-    """Pick 'vmap' or 'sequential' for a batched plan.
+    """Pick 'vmap', 'shard', or 'sequential' for a batched plan.
 
     Feasibility gates first (no vmap path exists):
       * a config-variant federated/host instruction outside the
-        batchable set (fed_gram/fed_map/collect orchestration does not
-        accept a batch axis);
+        batchable set;
       * a BCOO format assigned to a config-variant value (sparse batch
         axes are unsupported — the invariant prefix may stay sparse).
 
@@ -332,6 +340,14 @@ def choose_mode(bplan: BatchedPlan,
     sequential-reuse loop (per-config dispatch overhead, cross-config
     cache hits deduplicated). A memory guard rejects suffixes whose
     bucket-replicated intermediates overflow `VMAP_MEM_BUDGET`.
+
+    When the plan was compiled against a mesh whose `config` axis has
+    c > 1 devices and the bucket divides evenly, a third option enters
+    the arbitration: shard the bucket axis over `config` — each device
+    pays the per-config roofline for bucket/c configs plus a dispatch
+    constant (`costmodel.config_shard_cost_s`). It wins exactly when
+    k × the padded per-config cost exceeds the single-device vmap cost
+    by more than the extra launch overhead.
     """
     plan = bplan.plan
     variant = bplan.variant_uids
@@ -341,8 +357,8 @@ def choose_mode(bplan: BatchedPlan,
     inv_ins = [i for i in plan.instructions if i.out_id not in variant]
     for ins in var_ins:
         op = ins.node.op
-        if (op.startswith("fed_") and op not in BATCHABLE_FED_OPS) \
-                or op == "collect":
+        if (op.startswith("fed_") or op == "collect") \
+                and op not in BATCHABLE_FED_OPS:
             return "sequential"
     fmts = plan.formats_for(sparse_inputs)
     if any(u in fmts for u in bplan.batched_value_uids):
@@ -350,11 +366,18 @@ def choose_mode(bplan: BatchedPlan,
     var_bytes = sum(ins.node.est_bytes() for ins in var_ins)
     if bplan.bucket * var_bytes > costmodel.VMAP_MEM_BUDGET:
         return "sequential"
-    bat = costmodel.batched_cost_s([i.node for i in inv_ins],
-                                   [i.node for i in var_ins],
-                                   bplan.bucket)
+    inv_nodes = [i.node for i in inv_ins]
+    var_nodes = [i.node for i in var_ins]
+    bat = costmodel.batched_cost_s(inv_nodes, var_nodes, bplan.bucket)
     seq = costmodel.sequential_cost_s(list(roots_list), reuse_active)
-    return "vmap" if bat <= seq else "sequential"
+    ms = getattr(plan, "mesh_spec", None)
+    c = int(getattr(ms, "config", 1) or 1) if ms is not None else 1
+    sh = (costmodel.config_shard_cost_s(inv_nodes, var_nodes,
+                                        bplan.bucket, c)
+          if c > 1 and bplan.bucket % c == 0 else float("inf"))
+    if seq < min(bat, sh):
+        return "sequential"
+    return "shard" if sh < bat else "vmap"
 
 
 def pad_batch(arr: np.ndarray, bucket: int) -> np.ndarray:

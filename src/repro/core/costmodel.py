@@ -136,6 +136,9 @@ def est_cost_s(n: Node) -> float:
     """Estimated wall-clock seconds to execute one HOP standalone."""
     if n.op == "collect" or n.op.startswith("fed_"):
         return fed_cost_s(n)
+    if n.op.startswith("shard_") or n.op == "reshard" \
+            or n.placement == "sharded":
+        return shard_cost_s(n)
     base = HEAVY_OP_BASE_S if n.op in HEAVY_OPS else LIGHT_OP_BASE_S
     return base + max(node_flops(n) / PEAK_FLOPS, node_bytes(n) / PEAK_BW)
 
@@ -224,6 +227,86 @@ def collect_cost_s(fed_value: Node, n_sites: int) -> float:
 
 
 # ---------------------------------------------------------------------------
+# Sharded placement costs: collectives over the device mesh as
+# first-class terms, weighed against the roofline `est_cost_s`
+# ---------------------------------------------------------------------------
+
+# Per-hop device-interconnect bandwidth (ICI on TPU, shared-memory copy
+# between forced host devices on CPU). Well above the federation link
+# (NET_BW) and below local memory bandwidth — collectives are cheap but
+# not free, which is what makes small outputs shard and huge ones pay.
+ICI_BW = 1e10          # bytes/s per link
+
+# shard_map segment dispatch overhead: device-collective setup costs
+# more than a plain jit launch, so tiny plans must not shard.
+SHARD_LAUNCH_S = 50e-6
+
+# Leaves below this dense footprint are never worth row-sharding: the
+# dispatch overhead alone beats any per-shard compute win.
+SHARD_MIN_LEAF_BYTES = 1 << 20
+
+
+def allreduce_bytes(n: Node, d: int) -> int:
+    """Total bytes crossing device links for a ring all-reduce of this
+    node's output over a `d`-device axis: 2·B·(d-1). The compile-time
+    estimate behind the runtime's `ShardLog.collective_bytes` meter."""
+    return int(2.0 * _dense_bytes(n) * max(d - 1, 0))
+
+
+def allgather_bytes(n: Node, d: int) -> int:
+    """Total link bytes to all-gather a value to global size B on every
+    device: B·(d-1) — the `reshard` boundary's meter estimate."""
+    return int(_dense_bytes(n) * max(d - 1, 0))
+
+
+def collective_bytes(n: Node) -> int:
+    """Estimated link bytes one sharded instruction moves (0 for
+    row-preserving sharded ops — they need no collective at all)."""
+    d = int(n.attr("n_dev", 1) or 1)
+    if n.op == "reshard":
+        return allgather_bytes(n, d)
+    if n.op.startswith("shard_"):
+        return allreduce_bytes(n, d)
+    return 0
+
+
+def _shard_flops(n: Node) -> float:
+    """Total flops of the underlying computation of a shard op (the
+    per-device share is this / n_dev — shards work in parallel)."""
+    op = n.op
+    out = _numel(n.shape)
+    if op == "shard_gram":
+        return 2.0 * out * n.inputs[0].shape[0]
+    if op == "shard_xtv":
+        return 2.0 * out * n.inputs[0].shape[0]
+    if op in ("shard_colsums", "shard_sum"):
+        return float(max((_numel(i.shape) for i in n.inputs), default=out))
+    return node_flops(n)  # row-preserving sharded ops keep their base op
+
+
+def shard_cost_s(n: Node) -> float:
+    """Estimated seconds for one sharded instruction: shard_map launch
+    + the per-device roofline share + the collective (ring time over
+    `d` parallel links)."""
+    d = int(n.attr("n_dev", 1) or 1)
+    if n.op == "reshard":
+        return SHARD_LAUNCH_S + allgather_bytes(n, d) / (d * ICI_BW)
+    compute = max(_shard_flops(n) / d / PEAK_FLOPS,
+                  node_bytes(n) / d / PEAK_BW)
+    coll = collective_bytes(n) / (d * ICI_BW)
+    base = SHARD_LAUNCH_S if n.op.startswith("shard_") else LIGHT_OP_BASE_S
+    return base + compute + coll
+
+
+def reshard_cost_s(x: Node, d: int) -> float:
+    """Cost of materializing a row-sharded value as a replicated local
+    one (`all_gather`) — the boundary `lower_distributed` inserts for
+    non-lowerable consumers, and the baseline every sharded lowering
+    must beat (the shard-level analogue of `collect_cost_s`)."""
+    return SHARD_LAUNCH_S + _dense_bytes(x) * max(d - 1, 0) / (d * ICI_BW)
+
+
+# ---------------------------------------------------------------------------
 # Task-parallel batched execution (§5 parfor): vmap-vs-sequential
 # arbitration for the config axis
 # ---------------------------------------------------------------------------
@@ -262,6 +345,24 @@ def batched_cost_s(invariant: list[Node], variant: list[Node],
     for n in variant:
         base = HEAVY_OP_BASE_S if n.op in HEAVY_OPS else LIGHT_OP_BASE_S
         total += base + bucket * _work_s(n)
+    return total
+
+
+def config_shard_cost_s(invariant: list[Node], variant: list[Node],
+                        bucket: int, c: int) -> float:
+    """Estimated seconds for the batched grid with the bucket axis
+    sharded over the mesh's `config` axis (`c` devices): the invariant
+    prefix still runs once replicated, each variant instruction pays a
+    shard_map launch but only `bucket / c` of the per-config work —
+    k × padded cost vs single-device vmap is exactly the arbitration
+    the ISSUE names."""
+    total = PARFOR_DISPATCH_S
+    for n in invariant:
+        total += est_cost_s(n)
+    per_dev = max(bucket // max(c, 1), 1)
+    for n in variant:
+        base = HEAVY_OP_BASE_S if n.op in HEAVY_OPS else LIGHT_OP_BASE_S
+        total += base + SHARD_LAUNCH_S + per_dev * _work_s(n)
     return total
 
 

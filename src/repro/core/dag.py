@@ -54,12 +54,15 @@ class Node:
     shape: tuple[int, ...]
     dtype: Any
     sparsity: float  # estimated nnz / numel in [0, 1]
-    # Where the *value* lives: 'local' (master memory) or 'federated'
-    # (row-partitioned across sites, never materialized at the master).
-    # Set on federated input leaves at construction and propagated by the
-    # compiler's placement pass (`repro.core.compiler.lower_federated`);
-    # deliberately not part of the lineage hash — placement describes a
-    # physical location, not a value.
+    # Where the *value* lives: 'local' (master memory), 'federated'
+    # (row-partitioned across sites, never materialized at the master),
+    # or 'sharded' (row-sharded over the device mesh's `data` axis,
+    # resident as one global array with a NamedSharding).
+    # Set on federated input leaves at construction and propagated by
+    # the compiler's placement passes (`lower_federated` /
+    # `lower_distributed` in `repro.core.compiler`); deliberately not
+    # part of the lineage hash — placement describes a physical
+    # location, not a value.
     placement: str = "local"
     uid: int = field(default_factory=lambda: next(_counter))
 

@@ -177,6 +177,12 @@ class FederatedTensor:
     ranges: list[tuple[int, int]]  # [start, stop) per site
     ncols: int
     log: ExchangeLog = field(default_factory=ExchangeLog)
+    # batched (`parfor`) site layout: when set, every site's partition
+    # carries a leading config axis — data is (k, rows_i, ncols) for the
+    # k stacked grid configurations. Produced by batched `fed_map`
+    # execution; consumed by the batched paths of the other fed_*
+    # instructions (vmap over axis 0 at each site) and by `collect`.
+    batch: Optional[int] = None
 
     @classmethod
     def partition_rows(cls, x: np.ndarray, n_sites: int) -> "FederatedTensor":

@@ -88,6 +88,20 @@ def arg_signature(args) -> tuple:
     return tuple(out)
 
 
+def mesh_key_tag(mesh_tag: str, in_tags, out_tags) -> str:
+    """Segment-key suffix for shard_map-lowered executables.
+
+    A sharded segment closes over a concrete device mesh and per-arg
+    partition specs — none of which appear in the argument signature
+    (global shapes are identical). Suffixing the mesh shape and the
+    's'/'r' spec tags keeps sharded executables from ever colliding
+    with the local executable of the same segment body, or with the
+    same body sharded over a different mesh shape.
+    """
+    return (f"|mesh:{mesh_tag}|in:{''.join(in_tags)}"
+            f"|out:{''.join(out_tags)}")
+
+
 def _exe_nbytes(exe: Any) -> int:
     """Resident-size estimate of one compiled executable (generated
     code; argument buffers are owned by the caller, not the cache)."""

@@ -25,13 +25,41 @@ from typing import Any, Callable, Optional, Sequence
 
 import numpy as np
 
-from . import backend
+from . import backend, costmodel
 from .compiler import Plan, compile_plan
 from .dag import (LEAVES, LTensor, Node, _fingerprint, _lhash_rec,
                   input_tensor)  # _fingerprint: PreparedScript lineage
 from .federated import ExchangeLog, FederatedTensor, LocalSite
 from .jit_cache import get_jit_cache
 from .reuse import ReuseCache
+
+
+@dataclass
+class ShardLog:
+    """Shard-level analogue of the federation's `ExchangeLog`: counts
+    mesh-lowered segment dispatches and the collectives they carry.
+    Bytes come from the compile-time cost-model formulas (ring
+    all-reduce / all-gather total link bytes over the `data` axis), so
+    the meter is deterministic and auditable against exactly the
+    exchanges the compiler priced when it accepted each lowering."""
+
+    sharded_segments: int = 0         # shard_map segment dispatches
+    config_sharded_segments: int = 0  # bucket-axis (config) dispatches
+    reshards: int = 0                 # reshard (all-gather) boundaries run
+    collectives: int = 0              # psum-carrying shard_* reduces run
+    collective_bytes: int = 0         # total link bytes (cost-model est.)
+
+    @property
+    def total(self) -> int:
+        return (self.sharded_segments + self.config_sharded_segments
+                + self.reshards + self.collectives)
+
+    def as_dict(self) -> dict:
+        return dict(sharded_segments=self.sharded_segments,
+                    config_sharded_segments=self.config_sharded_segments,
+                    reshards=self.reshards,
+                    collectives=self.collectives,
+                    collective_bytes=self.collective_bytes)
 
 
 @dataclass
@@ -50,6 +78,9 @@ class RuntimeStats:
     # construction: both executors run the same federated instructions
     # and probe the reuse cache at the same compile-time points.
     exchange: ExchangeLog = field(default_factory=ExchangeLog)
+    # mesh-lowered execution meter (reshards / collective bytes) — the
+    # shard-level analogue of `exchange`
+    shard: ShardLog = field(default_factory=ShardLog)
 
     def as_dict(self):
         out = dict(instructions=self.instructions, executed=self.executed,
@@ -60,6 +91,8 @@ class RuntimeStats:
                    trace_time_s=round(self.trace_time, 6))
         if self.exchange.total:
             out["exchange"] = self.exchange.as_dict()
+        if self.shard.total:
+            out["shard"] = self.shard.as_dict()
         # the process-wide compiled-executable cache: hit/miss/eviction
         # counters + resident bytes, surfaced here so long-running
         # sessions can watch cache pressure alongside runtime counters
@@ -76,6 +109,9 @@ class _BatchCtx:
     batch: int                 # true number of configurations (k)
     bucket: int                # padded batch width (power-of-two)
     bvals: frozenset           # uids with a leading batch axis
+    cshard: int = 1            # bucket-axis shards (mesh `config` axis);
+                               # 1 = plain vmap, >1 = shard_map over it
+    cmesh: Any = None          # resolved jax Mesh when cshard > 1
 
 
 def _pad_axis0(arr, bucket: int):
@@ -153,6 +189,15 @@ class LineageRuntime:
         bctx = _BatchCtx(bplan=bplan, batch=bplan.batch,
                          bucket=bplan.bucket,
                          bvals=bplan.batched_value_uids)
+        if getattr(bplan, "mode", "vmap") == "shard":
+            # shard the bucket axis over the mesh's `config` axis;
+            # gracefully degrade to plain vmap when the mesh cannot be
+            # realized (too few devices) or the bucket does not divide
+            ms = getattr(plan, "mesh_spec", None)
+            c = int(getattr(ms, "config", 1) or 1) if ms is not None else 1
+            jm = ms.jax_mesh() if ms is not None else None
+            if c > 1 and jm is not None and bplan.bucket % c == 0:
+                bctx.cshard, bctx.cmesh = c, jm
         leaf_values = {
             uid: pad_batch(np.asarray(LEAVES.values[uid]), bplan.bucket)
             for uid in bplan.batched_leaf_uids}
@@ -283,6 +328,11 @@ class LineageRuntime:
         fmts = plan.formats_for(self.sparse_inputs)
         jcache = get_jit_cache()
         lmemo: dict[int, str] = {}
+        # resolve the plan's mesh once per run; None means not enough
+        # devices — sharded segments then run their local-equivalent
+        # (unshard) executables, bit-identical in results
+        mesh_spec = getattr(plan, "mesh_spec", None)
+        jmesh = (mesh_spec.jax_mesh() if mesh_spec is not None else None)
         for seg in segments:
             batched = bctx is not None and seg.variant
             self.stats.segments += 1
@@ -304,6 +354,23 @@ class LineageRuntime:
                 axes = "".join("0" if u in bctx.bvals else "-"
                                for u in seg.input_uids)
                 seg_key = f"{seg_key}|vmap:{axes}"
+                if bctx.cshard > 1:
+                    # bucket axis split over the mesh's config axis:
+                    # a different executable than plain vmap
+                    seg_key = (f"{seg_key}|cshard:{bctx.cshard}x"
+                               f"{mesh_spec.key_tag()}")
+                    self.stats.shard.config_sharded_segments += 1
+            seg_sharded = getattr(seg, "sharded", False)
+            if seg_sharded:
+                if jmesh is not None:
+                    from .jit_cache import mesh_key_tag
+                    from .segments import shard_specs
+                    in_t, out_t = shard_specs(seg)
+                    seg_key += mesh_key_tag(mesh_spec.key_tag(),
+                                            in_t, out_t)
+                    self._meter_shard_segment(seg)
+                else:
+                    seg_key += "|unshard"  # local-equivalent fallback
             lhash = None
             if reuse and last.probe:
                 lhash = _lhash_rec(last.node, lin, lmemo)
@@ -322,7 +389,8 @@ class LineageRuntime:
                         self._run_compensation(
                             seg, seg_key, fmts, args, rest, last.out_id,
                             jcache, values,
-                            bctx=bctx if batched else None)
+                            bctx=bctx if batched else None,
+                            jmesh=jmesh)
                     self._free(values, seg.frees)
                     continue
             if last.node.op in backend.NON_TRACEABLE_OPS:
@@ -344,7 +412,8 @@ class LineageRuntime:
             else:
                 outs = self._execute_cached(
                     seg_key, self._seg_builder(seg, fmts, bctx if batched
-                                               else None), args, jcache)
+                                               else None, jmesh=jmesh),
+                    args, jcache)
                 self.stats.executed += len(seg.instructions)
             for uid, val in zip(seg.output_uids, outs, strict=True):
                 values[uid] = val
@@ -358,16 +427,49 @@ class LineageRuntime:
     # ------------------------------------------------------------------
     @staticmethod
     def _seg_builder(seg, fmts: dict, bctx: Optional[_BatchCtx],
-                     drop_output: Optional[int] = None):
+                     drop_output: Optional[int] = None, jmesh=None):
         """Deferred segment-closure builder (only called on a jit-cache
         miss): plain for invariant segments, vmap-wrapped for
-        config-variant ones."""
-        from .segments import build_batched_segment_fn, build_segment_fn
+        config-variant ones, shard_map-wrapped for mesh-lowered ones
+        (with a local-equivalent fallback when the mesh is absent), and
+        shard_map-over-config around the vmap for bucket-sharded
+        batched segments."""
+        from .segments import (build_batched_segment_fn,
+                               build_config_sharded_segment_fn,
+                               build_segment_fn, build_sharded_segment_fn)
+        if getattr(seg, "sharded", False):
+            if jmesh is not None:
+                return lambda: build_sharded_segment_fn(
+                    seg, fmts, jmesh, drop_output=drop_output)
+            return lambda: build_segment_fn(
+                seg, fmts, drop_output=drop_output, unshard=True)
         if bctx is None:
             return lambda: build_segment_fn(seg, fmts,
                                             drop_output=drop_output)
+        if bctx.cshard > 1 and bctx.cmesh is not None:
+            return lambda: build_config_sharded_segment_fn(
+                seg, fmts, bctx.bvals, bctx.cmesh,
+                drop_output=drop_output)
         return lambda: build_batched_segment_fn(seg, fmts, bctx.bvals,
                                                 drop_output=drop_output)
+
+    # ------------------------------------------------------------------
+    def _meter_shard_segment(self, seg) -> None:
+        """Account one mesh dispatch of a sharded segment into
+        `stats.shard` — walked from the compile-time instruction stream,
+        so the meter matches the cost model's collective formulas."""
+        log = self.stats.shard
+        log.sharded_segments += 1
+        for ins in seg.instructions:
+            op = ins.node.op
+            if op == backend.RESHARD_OP:
+                log.reshards += 1
+                log.collective_bytes += costmodel.collective_bytes(
+                    ins.node)
+            elif op in backend.SHARD_REDUCE_OPS:
+                log.collectives += 1
+                log.collective_bytes += costmodel.collective_bytes(
+                    ins.node)
 
     # ------------------------------------------------------------------
     def _execute_cached(self, seg_key: str, build_fn, args, jcache):
@@ -390,13 +492,15 @@ class LineageRuntime:
     def _run_compensation(self, seg, seg_key: str, fmts: dict, args,
                           rest: tuple, probe_uid: int, jcache,
                           values: dict[int, Any],
-                          bctx: Optional[_BatchCtx] = None) -> None:
+                          bctx: Optional[_BatchCtx] = None,
+                          jmesh=None) -> None:
         """Execute a probe-hit segment's remaining outputs (the segment
         with the cached value dead-code eliminated); see
         `segments.build_segment_fn(drop_output=...)`."""
         outs = self._execute_cached(
             f"{seg_key}|comp",
-            self._seg_builder(seg, fmts, bctx, drop_output=probe_uid),
+            self._seg_builder(seg, fmts, bctx, drop_output=probe_uid,
+                              jmesh=jmesh),
             args, jcache)
         # interpreter-equivalent accounting: it would execute every
         # instruction except the one reused (DCE may drop more)
@@ -426,7 +530,11 @@ class LineageRuntime:
             node,
             in_fmts=tuple(fmts.get(u, backend.DENSE)
                           for u in ins.input_ids),
-            out_fmt=fmts.get(ins.out_id, backend.DENSE))
+            out_fmt=fmts.get(ins.out_id, backend.DENSE),
+            # eager execution holds GLOBAL arrays: shard-exec ops run
+            # their local-equivalent base kernels (no collectives)
+            unshard=(node.op in backend.SHARD_EXEC_OPS
+                     or node.placement == "sharded"))
         if bctx is not None:
             import jax.numpy as jnp
             bpos = {i for i, u in enumerate(ins.input_ids)
@@ -476,23 +584,29 @@ class LineageRuntime:
         if op == backend.COLLECT_OP:
             fed = args[0]
             fed._require_sites(op)
+            batched = getattr(fed, "batch", None) is not None
             parts = []
             for i, s in enumerate(fed.sites):
                 log.add_in(s.data, site=i)
                 log.add_round(i)
                 parts.append(np.asarray(s.data))
-            return np.concatenate(parts, axis=0)
+            # batched site layout is (k, rows_i, c): rows concat on axis 1
+            out = np.concatenate(parts, axis=1 if batched else 0)
+            return _pad_axis0(out, bctx.bucket) if batched else out
 
         if op == "fed_gram":
             fed = args[0]
             fed._require_sites(op)
+            batched = getattr(fed, "batch", None) is not None
+            vmap_axes = (0,) if batched else None
             out = None
             for i, s in enumerate(fed.sites):
-                g = s.execute("gram", (s.data,), stats=self.stats)
+                g = s.execute("gram", (s.data,), stats=self.stats,
+                              vmap_axes=vmap_axes)
                 log.add_in(g, site=i)
                 log.add_round(i)
                 out = g if out is None else out + g
-            return out
+            return _pad_axis0(out, bctx.bucket) if batched else out
 
         if op in ("fed_xtv", "fed_vm"):
             # x^T v with any subset of {x, v} federated: per-site
@@ -504,18 +618,23 @@ class LineageRuntime:
             fed = args[min(fed_pos)]
             fed._require_sites(op)
             self._check_alignment(op, [args[p] for p in sorted(fed_pos)])
+            # batched positions: local operands flagged by the plan plus
+            # federated operands whose site layout carries a config axis
+            # (stacked (k, rows_i, c) partitions from a batched fed_map)
+            bat = set(bpos) | {p for p in fed_pos
+                               if getattr(args[p], "batch", None)}
             # densify local operands once, outside the site loop; a
             # batched operand is sliced to the TRUE k before anything
             # crosses the wire — the bucket padding (duplicates of the
             # last config) exists only to stabilize executable shapes,
             # and must not inflate the exchange
             args = [v if pos in fed_pos else
-                    (backend.densify(v)[:bctx.batch] if pos in bpos
+                    (backend.densify(v)[:bctx.batch] if pos in bat
                      else backend.densify(v))
                     for pos, v in enumerate(args)]
-            vmap_axes = (tuple(0 if pos in bpos else None
+            vmap_axes = (tuple(0 if pos in bat else None
                                for pos in range(len(args)))
-                         if bpos else None)
+                         if bat else None)
             out = None
             for i, (a, b) in enumerate(fed.ranges):
                 site_args = []
@@ -523,7 +642,7 @@ class LineageRuntime:
                     if pos in fed_pos:
                         site_args.append(v.sites[i].data)
                     else:
-                        sl = v[:, a:b] if pos in bpos else v[a:b]
+                        sl = v[:, a:b] if pos in bat else v[a:b]
                         log.add_out(sl, site=i)
                         site_args.append(sl)
                 r = fed.sites[i].execute("xtv", tuple(site_args),
@@ -532,16 +651,19 @@ class LineageRuntime:
                 log.add_in(r, site=i)
                 log.add_round(i)
                 out = r if out is None else out + r
-            return _pad_axis0(out, bctx.bucket) if bpos else out
+            return _pad_axis0(out, bctx.bucket) if bat else out
 
         if op == "fed_mv":
             fed, w = args
             fed._require_sites(op)
             w = backend.densify(w)
-            batched = 1 in bpos
-            if batched:  # send the true k configs, never the padding
+            fed_b = getattr(fed, "batch", None) is not None
+            w_b = 1 in bpos
+            batched = fed_b or w_b
+            if w_b:  # send the true k configs, never the padding
                 w = w[:bctx.batch]
-            vmap_axes = (None, 0) if batched else None
+            vmap_axes = ((0 if fed_b else None, 0 if w_b else None)
+                         if batched else None)
             parts = []
             for i, s in enumerate(fed.sites):
                 log.add_out(w, site=i)  # broadcast (whole grid at once)
@@ -558,42 +680,66 @@ class LineageRuntime:
         if op == "fed_colsums":
             fed = args[0]
             fed._require_sites(op)
+            batched = getattr(fed, "batch", None) is not None
+            vmap_axes = (0,) if batched else None
             out = None
             for i, s in enumerate(fed.sites):
-                r = s.execute("colSums", (s.data,), stats=self.stats)
+                r = s.execute("colSums", (s.data,), stats=self.stats,
+                              vmap_axes=vmap_axes)
                 log.add_in(r, site=i)
                 log.add_round(i)
                 out = r if out is None else out + r
-            return out
+            return _pad_axis0(out, bctx.bucket) if batched else out
 
         if op == "fed_map":
-            if bpos:
-                raise NotImplementedError(
-                    "fed_map with a batched operand has no vmapped "
-                    "path; batching.choose_mode must fall back")
-            return self._exec_fed_map(node, args, log)
+            return self._exec_fed_map(node, args, log, bctx=bctx,
+                                      bpos=bpos)
 
         raise NotImplementedError(f"federated op {op!r}")
 
-    def _exec_fed_map(self, node, args: list, log: ExchangeLog
-                      ) -> FederatedTensor:
+    def _exec_fed_map(self, node, args: list, log: ExchangeLog,
+                      bctx: Optional[_BatchCtx] = None,
+                      bpos: frozenset = frozenset()) -> FederatedTensor:
         """Row-preserving op applied per site: the output is a new
         `FederatedTensor` over the same ranges — no aggregate exchange.
         Local operands travel by shape: scalars and `full` generators
         cost nothing (generated on site), broadcast rows go to every
-        site, row-aligned matrices are sent sliced."""
+        site, row-aligned matrices are sent sliced.
+
+        Batched (`parfor`) operands — local values flagged by the plan
+        (`bpos`) or federated operands already carrying the stacked
+        layout — travel as ONE (k, …) payload per site and the site's
+        work runs vmapped over the config axis; the output federated
+        tensor then carries the stacked (k, rows_i, c) site layout
+        (`FederatedTensor.batch`), which the other fed_* instructions'
+        batched paths consume. Only the TRUE k crosses the wire."""
         inner = node.attr("inner")
         n_args = node.attr("n_args")
         fed_pos = set(node.attr("fed_args", ()))
         gens = {p: (v, k, dt) for p, v, k, dt in node.attr("gen_args", ())}
         iattrs = dict(node.attr("iattrs", ()))
         slot: dict[int, Any] = {}
-        it = iter(args)
+        bslots: set[int] = set()  # inner positions carrying the config axis
+        it = iter(enumerate(args))
         for pos in range(n_args):
             if pos not in gens:
-                v = next(it)
-                # densify local operands once, outside the site loop
-                slot[pos] = v if pos in fed_pos else backend.densify(v)
+                ai, v = next(it)
+                if pos in fed_pos:
+                    slot[pos] = v
+                    if getattr(v, "batch", None) is not None:
+                        bslots.add(pos)
+                else:
+                    # densify local operands once, outside the site
+                    # loop; batched ones sliced to the TRUE k up front
+                    v = backend.densify(v)
+                    if ai in bpos:
+                        v = v[:bctx.batch]
+                        bslots.add(pos)
+                    slot[pos] = v
+        batched = bool(bslots)
+        vmap_axes = (tuple(0 if pos in bslots else None
+                           for pos in range(n_args))
+                     if batched else None)
         feds = [slot[p] for p in sorted(fed_pos)]
         fed = feds[0]
         fed._require_sites("fed_map")
@@ -619,13 +765,16 @@ class LineageRuntime:
                 else:
                     v = slot[pos]
                     shp = getattr(v, "shape", ())
-                    if shp == () or shp[0] == 1:
-                        if shp != ():
-                            log.add_out(v, site=i)  # broadcast row
+                    # route by the per-config shape: a batched operand
+                    # carries a leading (k, …) axis on top of it
+                    ishp = shp[1:] if pos in bslots else shp
+                    if ishp == () or ishp[0] == 1:
+                        if ishp != () or pos in bslots:
+                            log.add_out(v, site=i)  # broadcast payload
                             sent = True
                         site_args.append(v)
                     else:
-                        sl = v[a:b]
+                        sl = (v[:, a:b] if pos in bslots else v[a:b])
                         log.add_out(sl, site=i)
                         sent = True
                         site_args.append(sl)
@@ -635,10 +784,11 @@ class LineageRuntime:
                 log.add_round(i)
             out_i = fed.sites[i].execute(
                 inner, tuple(site_args), attrs=tuple(sorted(ia.items())),
-                stats=self.stats)
+                stats=self.stats, vmap_axes=vmap_axes)
             new_sites.append(LocalSite(out_i))
         return FederatedTensor(sites=new_sites, ranges=list(fed.ranges),
-                               ncols=node.shape[1])
+                               ncols=node.shape[1],
+                               batch=bctx.batch if batched else None)
 
     @staticmethod
     def _check_alignment(op: str, feds: list) -> None:

@@ -24,6 +24,13 @@ Segment boundaries are forced by:
     segments, and each `fed_*` instruction's *per-site* work is itself
     compiled through the kernel registry + jit cache as per-site
     sub-segments (`repro.core.federated.LocalSite.execute`)
+  * shard-exec flips — instructions lowered for the device mesh
+    (`placement='sharded'` values, `shard_*` reduces, `reshard`
+    boundaries) never share a segment with legacy memory-based
+    `distributed` instructions; a maximal shard-exec run lowers to ONE
+    `shard_map`-wrapped closure (`build_sharded_segment_fn`), so the
+    whole chain — elementwise riders, per-shard partial reduce, psum —
+    fuses into a single collective-carrying executable
   * non-traceable ops — anything in `backend.NON_TRACEABLE_OPS` (the
     `fed_*` site-orchestration ops, `collect` exchange boundaries, and
     host ops like `quantile`) runs in its own segment, outside any jit
@@ -70,6 +77,8 @@ class Segment:
     target: str                   # 'local' | 'distributed' | 'federated'
     key: str                      # canonical structural hash
     variant: bool = False         # carries the config batch axis (vmapped)
+    sharded: bool = False         # shard-exec lane: lowered via shard_map
+                                  # over the device mesh's data axis
 
     @property
     def fused(self) -> bool:
@@ -80,6 +89,14 @@ def _target_neutral(ins) -> bool:
     """Scalar generators (literals, folded constants) cost nothing on any
     target; letting them join either side keeps heavy runs contiguous."""
     return not ins.input_ids and ins.node.shape == ()
+
+
+def _shard_exec(ins) -> bool:
+    """Instruction executes on the device mesh (inside `shard_map`):
+    either its value keeps the row-sharded placement or it is one of the
+    explicit shard-exec ops (per-shard reduce + psum, reshard)."""
+    return (ins.node.placement == "sharded"
+            or ins.node.op in backend.SHARD_EXEC_OPS)
 
 
 def _segment_key(instructions, input_uids, output_positions,
@@ -117,8 +134,10 @@ def segment_plan(plan: "Plan", reuse_active: bool,
     groups: list[list] = []
     group_targets: list[str] = []
     group_variant: list[bool] = []
+    group_sharded: list[bool] = []
     cur_target: Optional[str] = None  # None while the group is all-neutral
     cur_variant: Optional[bool] = None
+    cur_sharded: Optional[bool] = None
     for ins in plan.instructions:
         neutral = _target_neutral(ins)
         start_new = (
@@ -131,13 +150,20 @@ def segment_plan(plan: "Plan", reuse_active: bool,
             or (not neutral and cur_target is not None
                 and ins.target != cur_target)
             or (not neutral and cur_variant is not None
-                and is_var(ins) != cur_variant))
+                and is_var(ins) != cur_variant)
+            # shard-exec instructions never fuse with legacy memory-based
+            # 'distributed' instructions: the former lower via shard_map,
+            # the latter via plain jit over big arrays
+            or (not neutral and cur_sharded is not None
+                and _shard_exec(ins) != cur_sharded))
         if start_new:
             groups.append([ins])
             group_targets.append(ins.target)
             group_variant.append(is_var(ins))
+            group_sharded.append(_shard_exec(ins))
             cur_target = None if neutral else ins.target
             cur_variant = None if neutral else is_var(ins)
+            cur_sharded = None if neutral else _shard_exec(ins)
         else:
             groups[-1].append(ins)
             if not neutral and cur_target is None:
@@ -145,6 +171,9 @@ def segment_plan(plan: "Plan", reuse_active: bool,
                 group_targets[-1] = ins.target
             if not neutral and cur_variant is None:
                 cur_variant = is_var(ins)
+            if not neutral and cur_sharded is None:
+                cur_sharded = _shard_exec(ins)
+                group_sharded[-1] = _shard_exec(ins)
             if is_var(ins):
                 group_variant[-1] = True
 
@@ -193,13 +222,16 @@ def segment_plan(plan: "Plan", reuse_active: bool,
             frees=tuple(frees),
             target=group_targets[si],
             key=_segment_key(group, input_uids, output_positions,
-                             group_targets[si]),
-            variant=group_variant[si]))
+                             group_targets[si]
+                             + ("+sh" if group_sharded[si] else "")),
+            variant=group_variant[si],
+            sharded=group_sharded[si]))
     return segments
 
 
 def build_segment_fn(seg: Segment, formats: Optional[dict] = None,
-                     drop_output: Optional[int] = None):
+                     drop_output: Optional[int] = None,
+                     unshard: bool = False):
     """Lower a segment to one pure closure over the kernel registry.
 
     The result takes the segment's external inputs positionally (order of
@@ -215,6 +247,12 @@ def build_segment_fn(seg: Segment, formats: Optional[dict] = None,
     instruction not needed for the remaining ones is dead-code
     eliminated — the closure computes exactly what the per-instruction
     interpreter would after the same hit.
+
+    `unshard` builds the local-equivalent variant of a sharded segment
+    (mesh unavailable at runtime): shard-exec kernels are swapped for
+    their single-device base ops (`backend.SHARD_BASE_OPS`; `reshard`
+    becomes identity), so the closure computes the same global values
+    without any collective.
     """
     fmts = formats or {}
     out_uids = tuple(u for u in seg.output_uids if u != drop_output)
@@ -232,7 +270,8 @@ def build_segment_fn(seg: Segment, formats: Optional[dict] = None,
                   ins.node,
                   in_fmts=tuple(fmts.get(u, backend.DENSE)
                                 for u in ins.input_ids),
-                  out_fmt=fmts.get(ins.out_id, backend.DENSE)))
+                  out_fmt=fmts.get(ins.out_id, backend.DENSE),
+                  unshard=unshard))
              for ins in instructions]
     in_pos = {uid: i for i, uid in enumerate(seg.input_uids)}
 
@@ -265,3 +304,85 @@ def build_batched_segment_fn(seg: Segment, formats: Optional[dict],
                     for u in seg.input_uids)
     out_axes = tuple(0 if u in batched_uids else None for u in out_uids)
     return jax.vmap(fn, in_axes=in_axes, out_axes=out_axes)
+
+
+def shard_specs(seg: Segment) -> tuple[tuple[str, ...], tuple[str, ...]]:
+    """Per-boundary shard_map specs of a sharded segment.
+
+    Returns ('s'/'r' tag per external input, same per output). Input
+    tags come from the consumers' compile-time `sin` attrs (written by
+    `compiler.lower_distributed`): 's' = split on the mesh's data axis
+    (leading dim), 'r' = replicated. Untouched inputs (only consumed by
+    ops without a `sin`, e.g. literals feeding a neutral rider) default
+    to replicated. Output tags follow the value's placement: a
+    `sharded` output leaves the segment still row-split; everything
+    else (psum-reduced values, reshard results) is replicated.
+    """
+    tags: dict[int, str] = {}
+    for ins in seg.instructions:
+        sin = ins.node.attr("sin")
+        if not sin:
+            continue
+        for uid, tag in zip(ins.input_ids, sin):
+            prev = tags.setdefault(uid, tag)
+            if prev != tag:
+                raise ValueError(
+                    f"conflicting shard specs for value %{uid} in "
+                    f"segment {seg.index}: {prev!r} vs {tag!r}")
+    in_tags = tuple(tags.get(u, "r") for u in seg.input_uids)
+    out_tags = tuple("s" if n.placement == "sharded" else "r"
+                     for n in seg.output_nodes)
+    return in_tags, out_tags
+
+
+def build_sharded_segment_fn(seg: Segment, formats: Optional[dict],
+                             mesh, drop_output: Optional[int] = None):
+    """Lower a shard-exec segment to one `shard_map`-wrapped closure.
+
+    The segment body is the ordinary fused closure; `shard_map` runs it
+    per device along the mesh's `data` axis with in/out specs derived
+    from the compile-time `sin` tags ('s' -> rows split on the data
+    axis, 'r' -> replicated). Collectives (`jax.lax.psum` inside the
+    shard-reduce kernels, `all_gather` inside `reshard`) are the only
+    cross-shard communication — exactly the exchanges the cost model
+    priced when it accepted the lowering. `check_rep=False`: psum
+    outputs are replicated by construction.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed.mesh import DATA_AXIS
+    fn = build_segment_fn(seg, formats, drop_output=drop_output)
+    in_tags, out_tags = shard_specs(seg)
+    if drop_output is not None:
+        out_tags = tuple(t for u, t in zip(seg.output_uids, out_tags)
+                         if u != drop_output)
+    in_specs = tuple(P(DATA_AXIS) if t == "s" else P() for t in in_tags)
+    out_specs = tuple(P(DATA_AXIS) if t == "s" else P() for t in out_tags)
+    return shard_map(fn, mesh=mesh, in_specs=in_specs,
+                     out_specs=out_specs, check_rep=False)
+
+
+def build_config_sharded_segment_fn(seg: Segment, formats: Optional[dict],
+                                    batched_uids: frozenset, mesh,
+                                    drop_output: Optional[int] = None):
+    """Lower a config-variant segment to shard_map-over-`config` around
+    the vmapped closure: the bucket axis is split across the mesh's
+    `config` axis (each device vmaps over bucket/c configs), while
+    config-invariant inputs broadcast replicated. No collectives — the
+    configs are embarrassingly parallel; the stacked outputs reassemble
+    along axis 0 via the out specs.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed.mesh import CONFIG_AXIS
+    fn = build_batched_segment_fn(seg, formats, batched_uids,
+                                  drop_output=drop_output)
+    out_uids = tuple(u for u in seg.output_uids if u != drop_output)
+    in_specs = tuple(P(CONFIG_AXIS) if u in batched_uids else P()
+                     for u in seg.input_uids)
+    out_specs = tuple(P(CONFIG_AXIS) if u in batched_uids else P()
+                      for u in out_uids)
+    return shard_map(fn, mesh=mesh, in_specs=in_specs,
+                     out_specs=out_specs, check_rep=False)

@@ -1,2 +1,4 @@
+from .mesh import (CONFIG_AXIS, DATA_AXIS, MeshSpec,  # noqa: F401
+                   auto_mesh, get_mesh, set_mesh, use_mesh)
 from .sharding import (batch_specs, cache_specs, param_specs,  # noqa: F401
-                       safe_spec)
+                       rows_shardable, safe_spec)

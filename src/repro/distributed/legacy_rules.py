@@ -1,0 +1,151 @@
+"""QUARANTINED: transformer-era sharding rule table (pre-DSL).
+
+This module preserves the regex-driven PartitionSpec policy written for
+a transformer parameter tree (embed/attn/moe/mamba paths). Nothing in
+the linear-algebra DSL produces such a tree — the compiler's sharded
+placement lives in `repro.core.compiler.lower_distributed` over the
+mesh axes of `repro.distributed.mesh` — but the launch-layer dry-run
+tooling (`repro.launch.dryrun`) still sizes transformer checkpoints
+with these builders, so they are kept here, out of the DSL path,
+instead of deleted.
+
+Do not extend this table; new placement logic belongs in the compiler
+passes. The graceful-degradation helper it relies on (`safe_spec`) has
+moved to `repro.distributed.sharding`, which re-exports these builders
+for backward compatibility.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+from jax.sharding import PartitionSpec as P
+
+from .sharding import safe_spec
+
+# (path-regex, spec builder) — first match wins. `dp` = data axes tuple.
+_RULES: list[tuple[str, Any]] = [
+    # embeddings / head
+    (r"embed/tok$",          lambda dp: P("model", dp)),
+    (r"embed/books$",        lambda dp: P(None, "model", dp)),
+    (r"head/w$",             lambda dp: P(dp, "model")),
+    # gqa attention
+    (r"attn/w[qkv]$",        lambda dp: P(dp, "model")),
+    (r"attn/wo$",            lambda dp: P("model", dp)),
+    (r"xattn/w[qkv]$",       lambda dp: P(dp, "model")),
+    (r"xattn/wo$",           lambda dp: P("model", dp)),
+    # mla
+    (r"attn/wq_a$",          lambda dp: P(dp, None)),
+    (r"attn/wq_b$",          lambda dp: P(None, "model")),
+    (r"attn/wkv_a$",         lambda dp: P(dp, None)),
+    (r"attn/wkv_b_[kv]$",    lambda dp: P(None, "model", None)),
+    # dense mlp
+    (r"mlp/w_(gate|up)$",    lambda dp: P(dp, "model")),
+    (r"mlp/w_down$",         lambda dp: P("model", dp)),
+    (r"(moe|rwkv)/shared/w_(gate|up)$", lambda dp: P(dp, "model")),
+    (r"moe/shared/w_down$",  lambda dp: P("model", dp)),
+    # moe experts (EP on model)
+    (r"moe/router$",         lambda dp: P(dp, None)),
+    (r"moe/w_(gate|up)$",    lambda dp: P("model", dp, None)),
+    (r"moe/w_down$",         lambda dp: P("model", None, dp)),
+    # rwkv6
+    (r"rwkv/w[rkvg]$",       lambda dp: P(dp, "model")),
+    (r"rwkv/wo$",            lambda dp: P("model", dp)),
+    (r"rwkv/w[rk]_c$",       lambda dp: P(dp, "model")),
+    (r"rwkv/wv_c$",          lambda dp: P("model", dp)),
+    (r"rwkv/tm_w1$",         lambda dp: P(dp, None)),
+    (r"rwkv/wA$",            lambda dp: P(dp, None)),
+    (r"rwkv/u$",             lambda dp: P("model", None)),
+    # mamba
+    (r"mamba/in_proj$",      lambda dp: P(dp, "model")),
+    (r"mamba/conv_w$",       lambda dp: P("model", None, None)),
+    (r"mamba/x_proj$",       lambda dp: P("model", None)),
+    (r"mamba/dt_proj$",      lambda dp: P(None, "model")),
+    (r"mamba/A_log$",        lambda dp: P("model", None)),
+    (r"mamba/out_proj$",     lambda dp: P("model", dp)),
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def param_specs(param_shapes: Any, mesh: Mesh,
+                data_axes=("data",), fsdp: bool = True) -> Any:
+    """PartitionSpec pytree matching a param(-shapes) pytree."""
+    dp = data_axes if len(data_axes) > 1 else data_axes[0]
+    dp = dp if fsdp else None
+
+    def assign(path, leaf):
+        ps = _path_str(path)
+        shape = leaf.shape
+        spec = P()
+        for pat, builder in _RULES:
+            if re.search(pat, ps):
+                spec = builder(dp)
+                break
+        # stacked period params carry a leading period axis
+        if "periods/" in ps and len(spec) < len(shape):
+            spec = P(*((None,) + tuple(spec)))
+        return safe_spec(shape, spec, mesh)
+
+    return jax.tree_util.tree_map_with_path(assign, param_shapes)
+
+
+def batch_specs(batch: Any, mesh: Mesh, data_axes=("pod", "data")) -> Any:
+    """Shard the leading (batch) dim of every leaf on the data axes."""
+    dp = tuple(a for a in data_axes if a in mesh.shape)
+    dp = dp if len(dp) > 1 else (dp[0] if dp else None)
+
+    def assign(leaf):
+        spec = P(*((dp,) + (None,) * (len(leaf.shape) - 1)))
+        return safe_spec(leaf.shape, spec, mesh)
+
+    return jax.tree_util.tree_map(assign, batch)
+
+
+def cache_specs(cache_shapes: Any, mesh: Mesh, batch: int,
+                data_axes=("pod", "data"), seq_axis_name="model") -> Any:
+    """Decode-cache sharding: batch on data, sequence on `model`.
+
+    For batch=1 (long-context) the batch axis is unshardable, so the
+    sequence axis takes every available device instead."""
+    dp = tuple(a for a in data_axes if a in mesh.shape)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp]))
+    long_context = batch % max(dp_size, 1) != 0
+    dpa = dp if len(dp) > 1 else (dp[0] if dp else None)
+
+    def assign(path, leaf):
+        ps = _path_str(path)
+        shape = leaf.shape
+        ndim = len(shape)
+        if ndim == 0:
+            return P()
+        has_period = "periods/" in ps
+        off = 1 if has_period else 0     # leading stacked-period axis
+        spec = [None] * ndim
+        if ndim > off:
+            # batch axis
+            if not long_context:
+                spec[off] = dpa
+            # sequence axis for kv/latent caches (large 2nd dim)
+            if ndim > off + 1 and shape[off + 1] >= 4096:
+                spec[off + 1] = (dp + (seq_axis_name,)) if long_context \
+                    else seq_axis_name
+            elif ndim > off + 1 and long_context and \
+                    shape[off + 1] % 2 == 0 and shape[off + 1] >= 1024:
+                spec[off + 1] = seq_axis_name
+        return safe_spec(shape, P(*spec), mesh)
+
+    return jax.tree_util.tree_map_with_path(assign, cache_shapes)

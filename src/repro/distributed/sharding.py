@@ -1,84 +1,32 @@
-"""Sharding policy: parameter/batch/cache PartitionSpecs per mesh.
+"""Sharding helpers shared by the DSL's mesh placement and the launch
+layer.
 
-Baseline strategy (the §Perf hillclimbs iterate on this):
-  * `model` axis — tensor parallel: attention heads, FFN hidden, vocab,
-    experts (EP), mamba inner channels.
-  * `data` axis — batch data-parallel + FSDP: the non-TP dimension of
-    every large matrix is sharded on `data` (ZeRO-3-style; optimizer
-    state follows automatically since updates are elementwise).
-  * `pod` axis — outer data parallelism / federation boundary; params
-    are replicated across pods, batch is split, gradient sync crosses
-    pods once per step (relaxable via distributed.fedavg).
+The DSL's sharded execution is a *compiler* placement: `repro.core
+.compiler.lower_distributed` propagates a row-sharded placement over
+the HOP DAG against the mesh axes of `repro.distributed.mesh`
+(``data`` shards rows, ``config`` shards the parfor bucket axis), and
+the runtime lowers sharded segments through `jax.shard_map`. What this
+module contributes to that path is the *graceful degradation* contract:
 
-Decode caches shard batch on `data` and *sequence* on `model`
-(sequence-parallel cache: softmax reductions over the sharded axis
-compile to partial-reduce + all-reduce). `safe_spec` drops any axis that
-does not divide the corresponding dimension, so small models and odd
-head counts degrade gracefully to replication instead of erroring.
+  * `safe_spec` — drop any spec axis that does not divide the
+    corresponding dimension (replicate instead of erroring);
+  * `rows_shardable` — the compile-time form of the same rule used by
+    `lower_distributed` to decide whether a leaf's row count divides
+    the ``data`` axis (a non-dividing leaf stays local/replicated).
+
+The transformer-era regex rule table (embed/attn/moe path patterns)
+that used to live here reaches nothing in the DSL; it is quarantined in
+`repro.distributed.legacy_rules` for the launch-layer dry-run tooling
+and re-exported below for backward compatibility.
 """
 from __future__ import annotations
 
-import re
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
-
-# (path-regex, spec builder) — first match wins. `dp` = data axes tuple.
-_RULES: list[tuple[str, Any]] = [
-    # embeddings / head
-    (r"embed/tok$",          lambda dp: P("model", dp)),
-    (r"embed/books$",        lambda dp: P(None, "model", dp)),
-    (r"head/w$",             lambda dp: P(dp, "model")),
-    # gqa attention
-    (r"attn/w[qkv]$",        lambda dp: P(dp, "model")),
-    (r"attn/wo$",            lambda dp: P("model", dp)),
-    (r"xattn/w[qkv]$",       lambda dp: P(dp, "model")),
-    (r"xattn/wo$",           lambda dp: P("model", dp)),
-    # mla
-    (r"attn/wq_a$",          lambda dp: P(dp, None)),
-    (r"attn/wq_b$",          lambda dp: P(None, "model")),
-    (r"attn/wkv_a$",         lambda dp: P(dp, None)),
-    (r"attn/wkv_b_[kv]$",    lambda dp: P(None, "model", None)),
-    # dense mlp
-    (r"mlp/w_(gate|up)$",    lambda dp: P(dp, "model")),
-    (r"mlp/w_down$",         lambda dp: P("model", dp)),
-    (r"(moe|rwkv)/shared/w_(gate|up)$", lambda dp: P(dp, "model")),
-    (r"moe/shared/w_down$",  lambda dp: P("model", dp)),
-    # moe experts (EP on model)
-    (r"moe/router$",         lambda dp: P(dp, None)),
-    (r"moe/w_(gate|up)$",    lambda dp: P("model", dp, None)),
-    (r"moe/w_down$",         lambda dp: P("model", None, dp)),
-    # rwkv6
-    (r"rwkv/w[rkvg]$",       lambda dp: P(dp, "model")),
-    (r"rwkv/wo$",            lambda dp: P("model", dp)),
-    (r"rwkv/w[rk]_c$",       lambda dp: P(dp, "model")),
-    (r"rwkv/wv_c$",          lambda dp: P("model", dp)),
-    (r"rwkv/tm_w1$",         lambda dp: P(dp, None)),
-    (r"rwkv/wA$",            lambda dp: P(dp, None)),
-    (r"rwkv/u$",             lambda dp: P("model", None)),
-    # mamba
-    (r"mamba/in_proj$",      lambda dp: P(dp, "model")),
-    (r"mamba/conv_w$",       lambda dp: P("model", None, None)),
-    (r"mamba/x_proj$",       lambda dp: P("model", None)),
-    (r"mamba/dt_proj$",      lambda dp: P(None, "model")),
-    (r"mamba/A_log$",        lambda dp: P("model", None)),
-    (r"mamba/out_proj$",     lambda dp: P("model", dp)),
-]
-
-
-def _path_str(path) -> str:
-    parts = []
-    for k in path:
-        if hasattr(k, "key"):
-            parts.append(str(k.key))
-        elif hasattr(k, "idx"):
-            parts.append(str(k.idx))
-        else:
-            parts.append(str(k))
-    return "/".join(parts)
 
 
 def safe_spec(shape: tuple, spec: P, mesh: Mesh) -> P:
@@ -94,77 +42,21 @@ def safe_spec(shape: tuple, spec: P, mesh: Mesh) -> P:
     return P(*out)
 
 
-def param_specs(param_shapes: Any, mesh: Mesh,
-                data_axes=("data",), fsdp: bool = True) -> Any:
-    """PartitionSpec pytree matching a param(-shapes) pytree."""
-    dp = data_axes if len(data_axes) > 1 else data_axes[0]
-    dp = dp if fsdp else None
-
-    def assign(path, leaf):
-        ps = _path_str(path)
-        shape = leaf.shape
-        spec = P()
-        for pat, builder in _RULES:
-            if re.search(pat, ps):
-                spec = builder(dp)
-                break
-        # stacked period params carry a leading period axis
-        if "periods/" in ps and len(spec) < len(shape):
-            spec = P(*((None,) + tuple(spec)))
-        return safe_spec(shape, spec, mesh)
-
-    return jax.tree_util.tree_map_with_path(assign, param_shapes)
-
-
-def batch_specs(batch: Any, mesh: Mesh, data_axes=("pod", "data")) -> Any:
-    """Shard the leading (batch) dim of every leaf on the data axes."""
-    dp = tuple(a for a in data_axes if a in mesh.shape)
-    dp = dp if len(dp) > 1 else (dp[0] if dp else None)
-
-    def assign(leaf):
-        spec = P(*((dp,) + (None,) * (len(leaf.shape) - 1)))
-        return safe_spec(leaf.shape, spec, mesh)
-
-    return jax.tree_util.tree_map(assign, batch)
-
-
-def cache_specs(cache_shapes: Any, mesh: Mesh, batch: int,
-                data_axes=("pod", "data"), seq_axis_name="model") -> Any:
-    """Decode-cache sharding: batch on data, sequence on `model`.
-
-    For batch=1 (long-context) the batch axis is unshardable, so the
-    sequence axis takes every available device instead."""
-    dp = tuple(a for a in data_axes if a in mesh.shape)
-    dp_size = int(np.prod([mesh.shape[a] for a in dp]))
-    long_context = batch % max(dp_size, 1) != 0
-    dpa = dp if len(dp) > 1 else (dp[0] if dp else None)
-
-    def assign(path, leaf):
-        ps = _path_str(path)
-        shape = leaf.shape
-        ndim = len(shape)
-        if ndim == 0:
-            return P()
-        has_period = "periods/" in ps
-        off = 1 if has_period else 0     # leading stacked-period axis
-        spec = [None] * ndim
-        if ndim > off:
-            # batch axis
-            if not long_context:
-                spec[off] = dpa
-            # sequence axis for kv/latent caches (large 2nd dim)
-            if ndim > off + 1 and shape[off + 1] >= 4096:
-                spec[off + 1] = (dp + (seq_axis_name,)) if long_context \
-                    else seq_axis_name
-            elif ndim > off + 1 and long_context and \
-                    shape[off + 1] % 2 == 0 and shape[off + 1] >= 1024:
-                spec[off + 1] = seq_axis_name
-        return safe_spec(shape, P(*spec), mesh)
-
-    return jax.tree_util.tree_map_with_path(assign, cache_shapes)
+def rows_shardable(shape: tuple, d: int) -> bool:
+    """Compile-time `safe_spec` for the row axis: True iff sharding
+    axis 0 over `d` devices divides evenly. A False answer means the
+    value replicates (stays local) — it never errors."""
+    return d > 1 and len(shape) >= 1 and shape[0] % d == 0 \
+        and shape[0] >= d
 
 
 def named(mesh: Mesh, spec_tree: Any) -> Any:
     return jax.tree_util.tree_map(
         lambda s: NamedSharding(mesh, s), spec_tree,
         is_leaf=lambda x: isinstance(x, P))
+
+
+# Backward-compatible re-exports of the quarantined transformer-era
+# builders (consumed by repro.launch.dryrun only).
+from .legacy_rules import (batch_specs, cache_specs,  # noqa: E402,F401
+                           param_specs)

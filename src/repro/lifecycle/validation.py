@@ -48,11 +48,16 @@ def parfor(configs: Sequence, build_fn: Callable,
         back to the sequential loop;
       * ``'vmap'`` — force the batched path (raises `BatchingError`
         when no template exists);
+      * ``'shard'`` — force the batched path AND split the bucket axis
+        over the device mesh's `config` axis (one shard of the grid per
+        device, vmapped locally); degrades to plain vmap at runtime
+        when no realizable mesh is attached;
       * ``'sequential'`` — force the per-config loop (the PR-3 path:
         one plan per config, lineage reuse across them).
     """
-    if mode not in ("auto", "vmap", "sequential"):
-        raise ValueError(f"parfor mode {mode!r} not in auto|vmap|sequential")
+    if mode not in ("auto", "vmap", "shard", "sequential"):
+        raise ValueError(
+            f"parfor mode {mode!r} not in auto|vmap|shard|sequential")
     rt = runtime or get_runtime()
     config_outputs: list[list[LTensor]] = []
     for cfg in configs:
@@ -62,7 +67,7 @@ def parfor(configs: Sequence, build_fn: Callable,
     k = len(config_outputs)
     if k == 0:
         return []
-    if mode == "vmap" and k < 2:
+    if mode in ("vmap", "shard") and k < 2:
         raise BatchingError("batching needs >= 2 configurations")
     if mode != "sequential" and k >= 2:
         try:
@@ -70,17 +75,18 @@ def parfor(configs: Sequence, build_fn: Callable,
                 config_outputs, reuse_enabled=rt.cache is not None,
                 opt_level=rt.opt_level)
         except BatchingError:
-            if mode == "vmap":
+            if mode in ("vmap", "shard"):
                 raise
             bplan = None
         if bplan is not None:
             roots_list = [[o.node for o in outs]
                           for outs in config_outputs]
-            bplan.mode = ("vmap" if mode == "vmap" else choose_mode(
+            bplan.mode = (mode if mode in ("vmap", "shard")
+                          else choose_mode(
                 bplan, roots_list, rt.cache is not None,
                 rt.sparse_inputs))
             try:
-                if bplan.mode == "vmap":
+                if bplan.mode in ("vmap", "shard"):
                     return rt.evaluate_batch(bplan)
             finally:
                 # the hoisted (k, ...) stacks are parfor-internal:
