@@ -25,6 +25,11 @@ Prints ``name,us_per_call,derived`` CSV lines.
                           + config-sharded grid) vs the local fused
                           baseline, parity asserted
                           (BENCH_distributed.json)
+  serving_*             — ISSUE 7: `repro.serving.ModelServer` —
+                          coalesced scoring on deploy-warmed vmap
+                          buckets vs solo PreparedScript calls, plus
+                          open-loop p50/p99/QPS at seeded-Poisson load
+                          (BENCH_serving.json)
 
 Every run ends with a summary table aggregating the latest entry of all
 ``BENCH_*.json`` trajectories.
@@ -81,7 +86,10 @@ def aggregate() -> None:
                 k.endswith("_us_per_call") else f"{k}={v}"
                 for k, v in entry.items()
                 if k.endswith("_us_per_call") or k.endswith("speedup")
-                or k == "devices")
+                or k == "devices"
+                # serving latency/throughput columns (BENCH_serving)
+                or k.endswith("_p50_us") or k.endswith("_p99_us")
+                or k.endswith("_qps"))
             rows.append((name,
                          str(entry.get("benchmark", "?")),
                          str(entry.get("workload", ""))[:46],
@@ -105,7 +113,8 @@ def aggregate() -> None:
 def main() -> None:
     if "--smoke" in sys.argv:
         from benchmarks import (distributed_bench, federated_bench,
-                                fusion_bench, parfor_bench, sparse_bench)
+                                fusion_bench, parfor_bench, serving_bench,
+                                sparse_bench)
         print("name,us_per_call,derived")
         fusion_bench.main(rows=500, cols=32, calls=20, repeats=2)
         sparse_bench.main(rows=512, cols=64, calls=10, repeats=2)
@@ -116,12 +125,14 @@ def main() -> None:
         parfor_bench.main(rows=2048, cols=64, k=16, repeats=2,
                           fed_rows=1024, fed_cols=32)
         distributed_bench.main(rows=8192, cols=64, k=8, repeats=2)
+        serving_bench.main(d=64, n=256, concurrency=8, max_batch=8,
+                           rates=(500.0, 1000.0), openloop_n=120)
         aggregate()
         return
     from benchmarks import (cv_reuse, distributed_bench, federated_bench,
                             fusion_bench, hpo_baseline, hpo_reuse,
                             kernel_bench, parfor_bench, roofline_bench,
-                            sparse_bench)
+                            serving_bench, sparse_bench)
     quick = "--quick" in sys.argv
     ks = (1, 5, 10) if quick else (1, 5, 10, 20)
     print("name,us_per_call,derived")
@@ -136,6 +147,8 @@ def main() -> None:
     parfor_bench.main(k=8 if quick else 16, repeats=2 if quick else 3)
     distributed_bench.main(k=8 if quick else 16,
                            repeats=2 if quick else 3)
+    serving_bench.main(n=256 if quick else 512,
+                       openloop_n=120 if quick else 200)
     aggregate()
 
 

@@ -196,6 +196,10 @@ class BatchedPlan:
     # `segments.build_config_sharded_segment_fn`), degrading to plain
     # vmap at runtime when the mesh cannot be realized
     mode: str = "vmap"
+    # serving plans (`compile_serving`): batched leaf uids in argument
+    # order, so `LineageRuntime.replay_batch` can bind positional
+    # request stacks without consulting the global leaf registry
+    leaf_order: tuple = ()
     _segments: dict = field(default_factory=dict, repr=False)
 
     @property
@@ -211,7 +215,7 @@ class BatchedPlan:
         `LEAVES` would grow resident memory without bound across a
         long session. After release the plan cannot be re-executed."""
         from .dag import LEAVES
-        for uid in self.batched_leaf_uids:
+        for uid in self.batched_leaf_uids | set(self.leaf_order):
             LEAVES.values.pop(uid, None)
             LEAVES.lineage.pop(uid, None)
 
@@ -291,11 +295,17 @@ def compile_batched(config_outputs: Sequence[Sequence[LTensor]], *,
     template, batched_uids, k = merge_roots(roots_list)
     plan = compile_plan([LTensor(r) for r in template],
                         reuse_enabled=reuse_enabled, opt_level=opt_level)
-    # rewrites rebuild nodes but never fold batched leaves (they are
-    # inputs, not literals) — recompute the reachable batched set and
-    # variance on the final instruction stream; a batched leaf that is
-    # itself a plan root (identity configs) has no consuming
-    # instruction but still carries the batch axis
+    return _finalize_bplan(plan, k)
+
+
+def _finalize_bplan(plan: Plan, k: int) -> BatchedPlan:
+    """Wrap a compiled template plan into a `BatchedPlan`.
+
+    Rewrites rebuild nodes but never fold batched leaves (they are
+    inputs, not literals) — recompute the reachable batched set and
+    variance on the final instruction stream; a batched leaf that is
+    itself a plan root (identity configs) has no consuming instruction
+    but still carries the batch axis."""
     live_batched = set()
     for ins in plan.instructions:
         for inp in ins.node.inputs:
@@ -304,9 +314,53 @@ def compile_batched(config_outputs: Sequence[Sequence[LTensor]], *,
     for r in plan.roots:
         if is_batched_leaf(r):
             live_batched.add(r.uid)
-    bplan = BatchedPlan(plan=plan, batch=k, bucket=bucket_size(k),
-                        batched_leaf_uids=frozenset(live_batched),
-                        variant_uids=_variant_uids(plan))
+    return BatchedPlan(plan=plan, batch=k, bucket=bucket_size(k),
+                       batched_leaf_uids=frozenset(live_batched),
+                       variant_uids=_variant_uids(plan))
+
+
+def compile_serving(fn, arg_shapes: Sequence[tuple], arg_dtypes=None,
+                    arg_sparsities=None, *, reuse_enabled: bool = False,
+                    opt_level: int = 2) -> BatchedPlan:
+    """Compile a scoring function once into a *serving* `BatchedPlan`.
+
+    The serving counterpart of `compile_batched`, without the
+    `merge_roots` pass: every request executes the SAME plan with
+    different leaf bindings, so there is nothing to merge — `fn` is
+    traced directly over batched placeholder leaves (`dag.batch_input`
+    with a ``(1,) + shape`` zero stack, element shape = the declared
+    per-request shape). Every transitive consumer of a request leaf is
+    request-variant and lowers to vmapped segments; anything else
+    (model weights, folded constants) is the request-invariant prefix.
+
+    The returned plan carries `leaf_order` (batched-leaf uid per
+    argument position) and is replayed at ANY batch size through
+    `LineageRuntime.replay_batch`: batch k and its power-of-two bucket
+    are call-time properties — the segment set is k-independent and
+    executables re-specialize per bucket via the jit cache's concrete
+    argument signature, which is exactly what lets a server warm every
+    bucket at deploy time and replay live traffic with zero retraces.
+
+    Placeholder stacks are zeros, so `arg_sparsities` defaults to dense
+    (1.0) like `PreparedScript` — formats are declared, not guessed.
+    """
+    dtypes = list(arg_dtypes) if arg_dtypes is not None \
+        else [np.float64] * len(arg_shapes)
+    sps = list(arg_sparsities) if arg_sparsities is not None \
+        else [1.0] * len(arg_shapes)
+    leaves = [
+        batch_input(f"req{i}", np.zeros((1,) + tuple(s), dtype=d),
+                    sparsity=sp)
+        for i, (s, d, sp) in enumerate(zip(arg_shapes, dtypes, sps,
+                                           strict=True))]
+    outs = fn(*leaves)
+    if isinstance(outs, LTensor):
+        outs = [outs]
+    plan = compile_plan(list(outs), reuse_enabled=reuse_enabled,
+                        opt_level=opt_level)
+    bplan = _finalize_bplan(plan, 1)
+    bplan.bucket = bucket_size(1)
+    bplan.leaf_order = tuple(leaf.node.uid for leaf in leaves)
     return bplan
 
 

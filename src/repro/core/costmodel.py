@@ -366,6 +366,76 @@ def config_shard_cost_s(invariant: list[Node], variant: list[Node],
     return total
 
 
+# ---------------------------------------------------------------------------
+# Serving (repro.serving): coalesced-dispatch cost and the adaptive
+# batching-delay policy — padding waste traded against queue delay
+# ---------------------------------------------------------------------------
+
+def _serve_bucket(k: int) -> int:
+    """Power-of-two vmap bucket for k coalesced requests. Mirrors
+    `batching.bucket_size` (duplicated here because `batching` imports
+    this module) — serving replays warm under exactly those buckets."""
+    return 2 if k <= 2 else 1 << (k - 1).bit_length()
+
+
+def serve_batch_cost_s(invariant: list[Node], variant: list[Node],
+                       bucket: int) -> float:
+    """Estimated seconds for ONE coalesced serving dispatch.
+
+    Same cost structure as `batched_cost_s` — the `PARFOR_DISPATCH_S`
+    control-program constant is paid once for the whole coalesced
+    batch, the request-invariant prefix runs once, and every
+    request-variant instruction does `bucket`× the per-request work.
+    The padding waste is priced in: a batch of k requests padded to a
+    `bucket` > k executes `bucket - k` wasted lanes, which is what the
+    coalescer's delay policy weighs against queue time.
+    """
+    return batched_cost_s(invariant, variant, bucket)
+
+
+def coalesce_gain_s(invariant: list[Node], variant: list[Node],
+                    k: int, max_batch: int) -> float:
+    """Seconds saved by absorbing ONE more request into a pending batch
+    of k instead of letting it pay its own dispatch later.
+
+    Three regimes:
+      * k below the current bucket — the next request rides a padding
+        lane that is already paid for: the full cost of a solo dispatch
+        is saved;
+      * k exactly on a bucket boundary — absorbing one more request
+        doubles the vmap bucket, so the marginal batched work eats into
+        the solo-dispatch saving;
+      * k at `max_batch` — nothing to gain, dispatch now.
+    """
+    if k >= max_batch:
+        return 0.0
+    solo = serve_batch_cost_s(invariant, variant, _serve_bucket(1))
+    b = _serve_bucket(k)
+    if k < b:
+        return solo
+    marginal = (serve_batch_cost_s(invariant, variant, 2 * b)
+                - serve_batch_cost_s(invariant, variant, b))
+    return max(solo - marginal, 0.0)
+
+
+def coalesce_wait_s(invariant: list[Node], variant: list[Node],
+                    k: int, max_batch: int, max_wait_s: float) -> float:
+    """Adaptive batching delay: how much LONGER a coalescer holding k
+    queued requests should wait for the next arrival.
+
+    Waiting dt seconds delays all k held requests (total queue-delay
+    cost k·dt); absorbing the next arrival saves `coalesce_gain_s`.
+    Break-even at dt = gain / k — the budget shrinks as the batch
+    fills, so a nearly-full batch dispatches almost immediately while a
+    lone request is willing to wait for company. Clamped to the
+    operator-set `max_wait_s` policy ceiling (the p99 guard).
+    """
+    if k >= max_batch:
+        return 0.0
+    gain = coalesce_gain_s(invariant, variant, k, max_batch)
+    return min(max_wait_s, gain / max(k, 1))
+
+
 def sequential_cost_s(roots_list: list[list[Node]],
                       reuse_active: bool) -> float:
     """Estimated seconds for the PR-3 sequential path over k configs.

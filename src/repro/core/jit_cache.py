@@ -25,6 +25,7 @@ import os
 import time
 import warnings
 from collections import OrderedDict
+from contextlib import contextmanager
 from dataclasses import dataclass
 from typing import Any, Callable, Optional
 
@@ -53,13 +54,15 @@ class JitCacheStats:
     aot_fallbacks: int = 0    # segments served by plain jit (AOT failed)
     evictions: int = 0        # entries dropped by the entry/byte caps
     bytes_cached: int = 0     # resident generated-code bytes (estimate)
+    pinned: int = 0           # entries exempt from LRU (deploy-warmed)
 
     def as_dict(self) -> dict:
         return dict(hits=self.hits, misses=self.misses,
                     trace_time_s=round(self.trace_time, 6),
                     aot_fallbacks=self.aot_fallbacks,
                     evictions=self.evictions,
-                    bytes_cached=self.bytes_cached)
+                    bytes_cached=self.bytes_cached,
+                    pinned=self.pinned)
 
 
 def arg_signature(args) -> tuple:
@@ -129,6 +132,13 @@ class JitProgramCache:
         # key -> (executable, code bytes)
         self._entries: "OrderedDict[tuple, tuple[Callable, int]]" = \
             OrderedDict()
+        # keys exempt from LRU eviction (deploy-warmed serving
+        # executables: evicting one would put trace+compile back on a
+        # request's critical path — exactly what deploy-time warmup paid
+        # to remove)
+        self._pinned: set[tuple] = set()
+        # active pinning() recorders (normally 0 or 1)
+        self._recorders: list[set[tuple]] = []
         self.stats = JitCacheStats()
 
     def __len__(self) -> int:
@@ -137,6 +147,8 @@ class JitProgramCache:
     def lookup(self, seg_key: str, args) -> tuple[tuple, Optional[Callable]]:
         """Return (full key, executable-or-None); counts hit/miss."""
         key = (seg_key, arg_signature(args))
+        for rec in self._recorders:
+            rec.add(key)
         entry = self._entries.get(key)
         if entry is not None:
             self._entries.move_to_end(key)
@@ -174,20 +186,72 @@ class JitProgramCache:
         return exe, dt
 
     def _evict(self) -> None:
-        while self._entries and (
-                len(self._entries) > self.capacity
-                or self.stats.bytes_cached > self.byte_capacity):
-            if len(self._entries) == 1:
-                # never evict the entry just inserted: a single
-                # over-budget executable is still the one we must run
+        # Walk LRU-first, skipping pinned entries — pinned executables
+        # still occupy entry/byte budget (their pressure falls on the
+        # unpinned population) but can never be dropped. Keys recorded
+        # by an open pinning() block are protected already: deploy-time
+        # warmup compiles MORE executables than `capacity` allows in
+        # sequence, and evicting bucket 2 while warming bucket 16 would
+        # defeat the warmup. The newest unpinned entry is never evicted
+        # either: a single over-budget executable is still the one we
+        # must run.
+        protected = self._pinned.union(*self._recorders) \
+            if self._recorders else self._pinned
+        while True:
+            unpinned = [k for k in self._entries if k not in protected]
+            if len(unpinned) <= 1:
                 break
-            _, (_, nb) = self._entries.popitem(last=False)
+            over = (len(self._entries) > self.capacity
+                    or self.stats.bytes_cached > self.byte_capacity)
+            if not over:
+                break
+            key = unpinned[0]
+            _, nb = self._entries.pop(key)
             self.stats.bytes_cached -= nb
             self.stats.evictions += 1
 
+    # -- pinning (serving deploy-time warmup) --------------------------
+    def pin(self, key: tuple) -> None:
+        """Exempt `key` from LRU eviction (no-op if already pinned)."""
+        if key not in self._pinned:
+            self._pinned.add(key)
+            self.stats.pinned = len(self._pinned)
+
+    def unpin(self, key: tuple) -> None:
+        self._pinned.discard(key)
+        self.stats.pinned = len(self._pinned)
+        self._evict()  # unpinned entries are back under the caps
+
+    def unpin_all(self, keys=None) -> None:
+        """Unpin `keys` (or everything) and re-apply the caps."""
+        if keys is None:
+            self._pinned.clear()
+        else:
+            self._pinned.difference_update(keys)
+        self.stats.pinned = len(self._pinned)
+        self._evict()
+
+    @contextmanager
+    def pinning(self):
+        """Record every cache key touched inside the block and pin the
+        ones resident at exit. `ModelServer.deploy` wraps its bucket
+        warmup in this so the LRU can never evict a serving executable
+        mid-flight; the yielded set is kept so `shutdown` can unpin."""
+        rec: set[tuple] = set()
+        self._recorders.append(rec)
+        try:
+            yield rec
+        finally:
+            self._recorders.remove(rec)
+            for key in rec:
+                if key in self._entries:
+                    self.pin(key)
+
     def clear(self) -> None:
         self._entries.clear()
+        self._pinned.clear()
         self.stats.bytes_cached = 0
+        self.stats.pinned = 0
 
 
 _global_cache: Optional[JitProgramCache] = None

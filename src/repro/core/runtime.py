@@ -63,6 +63,40 @@ class ShardLog:
 
 
 @dataclass
+class ServingLog:
+    """Observability of the `repro.serving` request path: queue/coalesce
+    behaviour and the warm-path hygiene counter. Updated by the
+    `ModelServer` owning this runtime — all mutation happens on its
+    single dispatcher thread, so the counters need no locking."""
+
+    requests: int = 0        # requests scored (excludes rejections)
+    batches: int = 0         # coalesced dispatches
+    max_coalesce: int = 0    # largest coalesced batch observed
+    padded: int = 0          # padding lanes executed (bucket - k waste)
+    queue_peak: int = 0      # deepest queue observed at enqueue time
+    rejected: int = 0        # bounded-queue rejections (backpressure)
+    # jit-cache misses taken by a dispatch AFTER deploy-time warmup.
+    # The deploy contract is compile-off-the-request-path: this MUST
+    # stay 0 in steady state, and the serving benchmark asserts it.
+    retraces: int = 0
+    queue_wait_s: float = 0.0  # total enqueue->dispatch delay
+
+    @property
+    def total(self) -> int:
+        return self.requests + self.rejected
+
+    def as_dict(self) -> dict:
+        out = dict(requests=self.requests, batches=self.batches,
+                   max_coalesce=self.max_coalesce, padded=self.padded,
+                   queue_peak=self.queue_peak, rejected=self.rejected,
+                   retraces=self.retraces,
+                   queue_wait_s=round(self.queue_wait_s, 6))
+        if self.batches:
+            out["mean_coalesce"] = round(self.requests / self.batches, 2)
+        return out
+
+
+@dataclass
 class RuntimeStats:
     instructions: int = 0
     executed: int = 0      # instructions actually computed (not reused)
@@ -81,6 +115,10 @@ class RuntimeStats:
     # mesh-lowered execution meter (reshards / collective bytes) — the
     # shard-level analogue of `exchange`
     shard: ShardLog = field(default_factory=ShardLog)
+    # request-path meter (queue depth / coalesce sizes / padding waste /
+    # hot-path retraces), populated when this runtime backs a
+    # `repro.serving.ModelServer`
+    serving: ServingLog = field(default_factory=ServingLog)
 
     def as_dict(self):
         out = dict(instructions=self.instructions, executed=self.executed,
@@ -93,6 +131,8 @@ class RuntimeStats:
             out["exchange"] = self.exchange.as_dict()
         if self.shard.total:
             out["shard"] = self.shard.as_dict()
+        if self.serving.total:
+            out["serving"] = self.serving.as_dict()
         # the process-wide compiled-executable cache: hit/miss/eviction
         # counters + resident bytes, surfaced here so long-running
         # sessions can watch cache pressure alongside runtime counters
@@ -203,7 +243,15 @@ class LineageRuntime:
             for uid in bplan.batched_leaf_uids}
         values, lin = self._bind_leaves(plan, leaf_values, None)
         self._run_segments(plan, values, lin, bctx=bctx)
-        k = bplan.batch
+        return self._unpack_batch(plan, values, bctx)
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def _unpack_batch(plan: Plan, values: dict[int, Any],
+                      bctx: _BatchCtx) -> list[list[np.ndarray]]:
+        """Split a batched run's outputs into one list per config, in
+        order, with the bucket padding sliced off."""
+        k = bctx.batch
         per_config: list[list[np.ndarray]] = [[] for _ in range(k)]
         for uid in plan.output_ids:
             arr = backend.to_numpy(values[uid])
@@ -217,6 +265,42 @@ class LineageRuntime:
                 for j in range(k):
                     per_config[j].append(arr if j == 0 else arr.copy())
         return per_config
+
+    # ------------------------------------------------------------------
+    def replay_batch(self, bplan, stacked: Sequence[Any],
+                     k: int) -> list[list[np.ndarray]]:
+        """Replay a serving `BatchedPlan` (see `batching.compile_serving`)
+        on k stacked request bindings — the low-latency scoring entry.
+
+        `stacked` holds one ``(k,) + arg_shape`` array per argument,
+        aligned with `bplan.leaf_order`. The batch is padded up to the
+        power-of-two bucket (repeating the last request, exactly like
+        `parfor`) so every dispatch lands on a warm vmapped executable:
+        batch size and bucket are call-time properties — the segment
+        set is k-independent and the jit cache re-specializes per
+        bucket via the concrete argument signature. Nothing is read
+        from or written to the global leaf registry for the request
+        leaves, so concurrent plans cannot alias request data; padding
+        is sliced off before results are returned.
+        """
+        from .batching import bucket_size, pad_batch
+        plan = bplan.plan
+        bucket = bucket_size(k)
+        bctx = _BatchCtx(bplan=bplan, batch=k, bucket=bucket,
+                         bvals=bplan.batched_value_uids)
+        leaf_values = {
+            uid: pad_batch(np.asarray(a), bucket)
+            for uid, a in zip(bplan.leaf_order, stacked, strict=True)}
+        leaf_lineage = None
+        if self.cache is not None:
+            # reuse probes must key on the request content, not the
+            # released placeholder lineage — mirror PreparedScript
+            leaf_lineage = {
+                uid: f"req:{_fingerprint(np.asarray(a))}"
+                for uid, a in zip(bplan.leaf_order, stacked)}
+        values, lin = self._bind_leaves(plan, leaf_values, leaf_lineage)
+        self._run_segments(plan, values, lin, bctx=bctx)
+        return self._unpack_batch(plan, values, bctx)
 
     # ------------------------------------------------------------------
     def _bind_leaves(self, plan: Plan,
@@ -868,12 +952,20 @@ class PreparedScript:
         # leaf as empty and pin it to BCOO; default to dense (1.0) and
         # let callers declare what they will actually bind.
         self.runtime = runtime or get_runtime()
-        dtypes = arg_dtypes or [np.float64] * len(arg_shapes)
-        sps = arg_sparsities or [1.0] * len(arg_shapes)
+        self._fn = fn
+        self._arg_shapes = [tuple(int(d) for d in s) for s in arg_shapes]
+        self._arg_dtypes = [np.dtype(d) for d in (
+            arg_dtypes or [np.float64] * len(arg_shapes))]
+        self._arg_sparsities = list(
+            arg_sparsities or [1.0] * len(arg_shapes))
+        # shape-variation memo: bound-shapes tuple -> None (accepted) or
+        # the rejection message (see _check_shapes)
+        self._shape_verdicts: dict[tuple, Optional[str]] = {}
         self._leaves = [
             input_tensor(f"arg{i}", np.zeros(s, dtype=d), sparsity=sp)
             for i, (s, d, sp) in enumerate(
-                zip(arg_shapes, dtypes, sps, strict=True))]
+                zip(self._arg_shapes, self._arg_dtypes,
+                    self._arg_sparsities, strict=True))]
         outs = fn(*self._leaves)
         if isinstance(outs, LTensor):
             outs = [outs]
@@ -882,13 +974,120 @@ class PreparedScript:
             self._outputs, reuse_enabled=self.runtime.cache is not None,
             opt_level=self.runtime.opt_level)
 
-    def __call__(self, *arrays) -> list[np.ndarray]:
+    # ------------------------------------------------------------------
+    def validate_args(self, arrays: Sequence[Any],
+                      exact_shapes: bool = False) -> list[np.ndarray]:
+        """Validate bindings against the declared `arg_shapes` /
+        `arg_dtypes` — at bind time, with a clear `ValueError`, instead
+        of a shape/dtype explosion deep inside segment execution.
+
+        Dtypes: a binding whose dtype safe-casts to the declared one
+        (int grids into a float plan) is converted; anything lossy
+        (float into an int plan, complex into float) is an error.
+
+        Shapes: a binding may deviate from the declared shape only
+        along axes the plan never *constrains* — verified by re-tracing
+        the script function at the bound shapes and requiring the same
+        instruction stream (see `_check_shapes`); generators (`eye(n)`,
+        `ones((m, 1))` intercepts), slice bounds, and shape-dependent
+        rewrites all constrain their axes and reject the binding.
+        `exact_shapes` (the serving path, which stacks requests into
+        fixed buckets) skips the re-trace escape hatch entirely.
+        """
         if len(arrays) != len(self._leaves):
             # a real error, not an assert: argument-count bugs must
             # surface under `python -O` too
             raise ValueError(
                 f"PreparedScript expects {len(self._leaves)} argument(s), "
                 f"got {len(arrays)}")
+        out: list[np.ndarray] = []
+        mismatch = False
+        for i, (arr, shape, dtype) in enumerate(
+                zip(arrays, self._arg_shapes, self._arg_dtypes)):
+            arr = np.asarray(arr)
+            if arr.dtype != dtype:
+                if not np.can_cast(arr.dtype, dtype, casting="safe"):
+                    raise ValueError(
+                        f"PreparedScript arg{i}: bound dtype {arr.dtype} "
+                        f"does not safe-cast to the declared {dtype}")
+                arr = arr.astype(dtype)
+            if arr.shape != shape:
+                if exact_shapes or len(arr.shape) != len(shape):
+                    raise ValueError(
+                        f"PreparedScript arg{i}: bound shape {arr.shape} "
+                        f"!= declared {shape}")
+                mismatch = True
+            out.append(arr)
+        if mismatch:
+            self._check_shapes(tuple(a.shape for a in out))
+        return out
+
+    def _check_shapes(self, shapes: tuple) -> None:
+        """Accept deviating bound shapes iff the plan never constrains
+        the deviating axes: re-trace the script function at the bound
+        shapes and require an instruction stream identical up to leaf
+        renaming — same ops, attrs, dtypes, connectivity, and (for
+        zero-input generators, whose output shape is baked into their
+        kernel) the same shapes. Interior value shapes may differ: they
+        derive from the inputs, and every non-generator kernel is
+        shape-polymorphic. Verdicts are memoized per shape tuple."""
+        verdict = self._shape_verdicts.get(shapes)
+        if verdict is None and shapes in self._shape_verdicts:
+            return  # previously accepted
+        if verdict is None:
+            verdict = self._probe_shapes(shapes)
+            self._shape_verdicts[shapes] = verdict
+        if verdict is not None:
+            raise ValueError(verdict)
+
+    def _probe_shapes(self, shapes: tuple) -> Optional[str]:
+        declared = tuple(self._arg_shapes)
+        try:
+            leaves = [
+                input_tensor(f"arg{i}", np.zeros(s, dtype=d), sparsity=sp)
+                for i, (s, d, sp) in enumerate(
+                    zip(shapes, self._arg_dtypes, self._arg_sparsities))]
+            outs = self._fn(*leaves)
+            if isinstance(outs, LTensor):
+                outs = [outs]
+            probe = compile_plan(
+                list(outs), reuse_enabled=self.runtime.cache is not None,
+                opt_level=self.runtime.opt_level)
+        except Exception as e:
+            return (f"PreparedScript: bound shapes {shapes} != declared "
+                    f"{declared} and re-tracing at the bound shapes "
+                    f"failed ({type(e).__name__}: {e})")
+        reject = (f"PreparedScript: bound shapes {shapes} deviate from "
+                  f"the declared {declared} along axes the plan "
+                  "constrains (generator shapes, slice bounds, or "
+                  "shape-dependent rewrites differ)")
+        a_ins, b_ins = self.plan.instructions, probe.instructions
+        if len(a_ins) != len(b_ins):
+            return reject
+        # positional uid correspondence: declared-plan uid -> probe uid
+        pair: dict[int, int] = {
+            la.node.uid: lb.node.uid
+            for la, lb in zip(self._leaves, leaves)}
+        for ia, ib in zip(a_ins, b_ins):
+            na, nb = ia.node, ib.node
+            if (na.op != nb.op or na.attrs != nb.attrs
+                    or na.dtype != nb.dtype
+                    or len(ia.input_ids) != len(ib.input_ids)):
+                return reject
+            if not na.inputs and na.shape != nb.shape:
+                return reject  # generator output shape is kernel-baked
+            for ua, ub in zip(ia.input_ids, ib.input_ids):
+                if pair.setdefault(ua, ub) != ub:
+                    return reject
+            if pair.setdefault(ia.out_id, ib.out_id) != ib.out_id:
+                return reject
+        for ua, ub in zip(self.plan.output_ids, probe.output_ids):
+            if pair.get(ua) != ub:
+                return reject
+        return None
+
+    def __call__(self, *arrays) -> list[np.ndarray]:
+        arrays = self.validate_args(arrays)
         leaf_values: dict[int, Any] = {}
         leaf_lineage: dict[int, str] = {}
         # content fingerprints keep reuse sound across re-binds, but they
@@ -896,12 +1095,27 @@ class PreparedScript:
         # cache) need them
         need_lineage = self.runtime.cache is not None
         for leaf, arr in zip(self._leaves, arrays):
-            arr = np.asarray(arr)
             leaf_values[leaf.node.uid] = arr
             if need_lineage:
                 leaf_lineage[leaf.node.uid] = \
                     f"{leaf.node.attr('name')}:{_fingerprint(arr)}"
         return self.runtime.run_plan(self.plan, leaf_values, leaf_lineage)
+
+    # ------------------------------------------------------------------
+    def prepare_batched(self):
+        """Compile the serving form of this script: the same function
+        traced over *batched* request leaves, returning a
+        `batching.BatchedPlan` replayable at any batch size through
+        `LineageRuntime.replay_batch`. This is the deploy-time entry
+        `repro.serving.ModelServer` AOT-warms its power-of-two vmap
+        buckets from — request compile cost moves fully off the
+        request path."""
+        from .batching import compile_serving
+        return compile_serving(
+            self._fn, self._arg_shapes, self._arg_dtypes,
+            self._arg_sparsities,
+            reuse_enabled=self.runtime.cache is not None,
+            opt_level=self.runtime.opt_level)
 
 
 # ---------------------------------------------------------------------------

@@ -113,6 +113,8 @@ def lower_cell(arch: str, shape_name: str, mesh, *, verbose: bool = True,
 
     ma = compiled.memory_analysis()
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):  # older jax returns [dict]
+        ca = ca[0] if ca else {}
     txt = compiled.as_text()
     mine = hlocost.analyze(txt, n_devices=n_dev)
     mesh_name = "x".join(str(s) for s in mesh.devices.shape)

@@ -1,4 +1,13 @@
-"""Serving driver: batched prefill + decode with KV caches.
+"""LM text-generation driver: batched prefill + decode with KV caches.
+
+This is the *token-loop* server for the transformer model zoo — an
+autoregressive generate() over prefill/decode step functions. It is
+NOT the lifecycle scoring subsystem: deploying a compiled
+`PreparedScript` (lmDS scoring, pipelines) behind a request queue with
+adaptive coalescing lives in `repro.serving.ModelServer`
+(examples/serve_plan.py). The two serve different artifacts — this
+module serves *models by architecture*, `repro.serving` serves
+*compiled plans*.
 
 CPU-runnable on reduced configs (examples/serve_lm.py); the step
 functions are the exact ones the decode_32k / long_500k dry-run lowers

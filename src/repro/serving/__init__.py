@@ -1,0 +1,21 @@
+"""repro.serving — low-latency scoring of compiled lifecycle plans.
+
+The deployment end of the SystemDS lifecycle (§2: "model deployment
+and scoring" as a first-class lifecycle stage, JMLC-style embedded
+scoring): a `PreparedScript` is AOT-compiled at *deploy* time — every
+power-of-two vmap bucket of its batched serving plan is warmed and
+pinned in the jit cache — and live requests are coalesced onto those
+warm bucketed executables with zero compiles on the request path.
+
+Not to be confused with `repro.launch.serve`, the transformer
+prefill/decode text-generation driver for the LM model zoo; this
+package serves *plans* (lmDS scoring, pipelines), not token loops.
+
+    server = ModelServer(script, max_batch=16, max_wait_us=2000)
+    server.deploy()                  # compile + warm + pin, off-path
+    yhat, = server.score(x)          # thread-safe, coalesced
+    server.shutdown()
+"""
+from .server import ModelServer, QueueFullError, ScoreFuture  # noqa: F401
+
+__all__ = ["ModelServer", "QueueFullError", "ScoreFuture"]
