@@ -30,6 +30,11 @@ Prints ``name,us_per_call,derived`` CSV lines.
                           buckets vs solo PreparedScript calls, plus
                           open-loop p50/p99/QPS at seeded-Poisson load
                           (BENCH_serving.json)
+  streaming_*           — ISSUE 8: out-of-core chunked execution at a
+                          10x-undersized memory budget (bounded
+                          peak_live_bytes, one warm executable) and
+                          lineage-driven incremental retrain after a
+                          10% row append (BENCH_streaming.json)
 
 Every run ends with a summary table aggregating the latest entry of all
 ``BENCH_*.json`` trajectories.
@@ -89,7 +94,9 @@ def aggregate() -> None:
                 or k == "devices"
                 # serving latency/throughput columns (BENCH_serving)
                 or k.endswith("_p50_us") or k.endswith("_p99_us")
-                or k.endswith("_qps"))
+                or k.endswith("_qps")
+                # streaming residency columns (BENCH_streaming)
+                or k.endswith("chunks") or k == "peak_live_bytes")
             rows.append((name,
                          str(entry.get("benchmark", "?")),
                          str(entry.get("workload", ""))[:46],
@@ -114,7 +121,7 @@ def main() -> None:
     if "--smoke" in sys.argv:
         from benchmarks import (distributed_bench, federated_bench,
                                 fusion_bench, parfor_bench, serving_bench,
-                                sparse_bench)
+                                sparse_bench, streaming_bench)
         print("name,us_per_call,derived")
         fusion_bench.main(rows=500, cols=32, calls=20, repeats=2)
         sparse_bench.main(rows=512, cols=64, calls=10, repeats=2)
@@ -127,12 +134,13 @@ def main() -> None:
         distributed_bench.main(rows=8192, cols=64, k=8, repeats=2)
         serving_bench.main(d=64, n=256, concurrency=8, max_batch=8,
                            rates=(500.0, 1000.0), openloop_n=120)
+        streaming_bench.main(rows=16384, repeats=2, min_speedup=2.5)
         aggregate()
         return
     from benchmarks import (cv_reuse, distributed_bench, federated_bench,
                             fusion_bench, hpo_baseline, hpo_reuse,
                             kernel_bench, parfor_bench, roofline_bench,
-                            serving_bench, sparse_bench)
+                            serving_bench, sparse_bench, streaming_bench)
     quick = "--quick" in sys.argv
     ks = (1, 5, 10) if quick else (1, 5, 10, 20)
     print("name,us_per_call,derived")
@@ -149,6 +157,9 @@ def main() -> None:
                            repeats=2 if quick else 3)
     serving_bench.main(n=256 if quick else 512,
                        openloop_n=120 if quick else 200)
+    streaming_bench.main(rows=65536 if quick else 131072,
+                         repeats=2 if quick else 3,
+                         min_speedup=3.0 if quick else 5.0)
     aggregate()
 
 

@@ -1,0 +1,209 @@
+"""Out-of-core streaming execution + lineage-driven incremental recompute.
+
+ISSUE 8: lmDS and PCA compiled through `lower_chunked` and executed by
+the streaming runtime lane under a device-memory budget 10x smaller
+than the input:
+
+  * **bounded residency** — the streamed run's `peak_live_bytes` stays
+    under the budget while the materialized baseline (budget lifted)
+    holds the whole input; results agree to 1e-10 (lmDS vs numpy) and
+    1e-8 (PCA components, sign-aligned).
+  * **one warm executable** — jit-cache misses during the streamed run
+    stay bounded by the segment count, never the chunk count (the
+    power-of-two row bucket gives every full chunk one signature).
+  * **incremental retrain** — after a warm base run, appending 10% more
+    rows re-dispatches only the tail buckets (cached partials cover the
+    rest); measured against a cold streamed retrain of the full
+    appended matrix the delta path must be >= 5x faster.
+
+Appends a trajectory entry to ``benchmarks/BENCH_streaming.json``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from .common import emit
+
+BENCH_JSON = os.path.join(os.path.dirname(__file__), "BENCH_streaming.json")
+
+
+def _lm_ref(Xh, yh, reg=1e-3):
+    return np.linalg.solve(Xh.T @ Xh + reg * np.eye(Xh.shape[1]),
+                           Xh.T @ yh)
+
+
+def _lm_run(rt, Xh, yh, reg=1e-3):
+    from repro.core.dag import input_tensor
+    from repro.lifecycle.regression import lmDS
+    X = input_tensor("X", Xh)
+    y = input_tensor("y", yh)
+    return np.asarray(lmDS(X, y, reg=reg, runtime=rt)).ravel()
+
+
+def _align_signs(a, b):
+    s = np.sign(np.sum(a * b, axis=0))
+    s[s == 0] = 1.0
+    return b * s
+
+
+def main(rows: int = 131072, cols: int = 256, budget_ratio: int = 10,
+         repeats: int = 3, min_speedup: float = 5.0) -> dict:
+    from repro.core import costmodel
+    from repro.core.jit_cache import get_jit_cache
+    from repro.core.reuse import ReuseCache
+    from repro.core.runtime import LineageRuntime
+    from repro.lifecycle.algorithms import pca
+
+    rng = np.random.default_rng(8)
+    Xh = rng.normal(size=(rows, cols))
+    yh = rng.normal(size=(rows,))
+    budget = int(Xh.nbytes // budget_ratio)
+    saved = costmodel.CHUNK_MEM_BUDGET
+    jstats = get_jit_cache().stats
+    try:
+        costmodel.CHUNK_MEM_BUDGET = budget
+
+        # ---- streamed lmDS under the tight budget ----
+        # warmup run compiles the per-bucket executables; the timed run
+        # then measures steady-state streaming (matching the medianed
+        # materialized baseline below, whose first repeat compiles)
+        miss0 = jstats.misses
+        _lm_run(LineageRuntime(cache=None, fuse=True), Xh, yh)
+        rt = LineageRuntime(cache=None, fuse=True)
+        t0 = time.perf_counter()
+        got = _lm_run(rt, Xh, yh)
+        t_stream = time.perf_counter() - t0
+        s = rt.stats.streaming
+        err = float(np.abs(got - _lm_ref(Xh, yh).ravel()).max())
+        assert err < 1e-10, f"streamed lmDS err {err:.2e}"
+        assert s.chunks > 1 and 0 < s.peak_live_bytes <= budget, \
+            f"live set {s.peak_live_bytes} exceeds budget {budget}"
+        retraces = (jstats.misses - miss0) - rt.stats.segments
+        assert retraces <= 0, f"{retraces} chunk-level retraces"
+        chunks = s.chunks
+
+        # streamed PCA parity on the same matrix
+        prt = LineageRuntime(cache=ReuseCache(), fuse=True)
+        comps_s, _ = pca(_as_leaf(Xh), 3, runtime=prt)
+        assert prt.stats.streaming.chunks > 1
+
+        # ---- materialized baseline (budget lifted) ----
+        costmodel.CHUNK_MEM_BUDGET = 1 << 62
+        ts = []
+        for _ in range(repeats):
+            mrt = LineageRuntime(cache=None, fuse=True)
+            t0 = time.perf_counter()
+            got_m = _lm_run(mrt, Xh, yh)
+            ts.append(time.perf_counter() - t0)
+            assert mrt.stats.streaming.total == 0
+        t_mat = float(np.median(ts))
+        assert np.abs(got - got_m).max() < 1e-10
+        mrt = LineageRuntime(cache=ReuseCache(), fuse=True)
+        comps_m, _ = pca(_as_leaf(Xh), 3, runtime=mrt)
+        pca_err = float(np.abs(np.asarray(comps_s)
+                               - _align_signs(np.asarray(comps_s),
+                                              np.asarray(comps_m))).max())
+        assert pca_err < 1e-8, f"streamed PCA err {pca_err:.2e}"
+
+        # ---- append-10% incremental retrain vs cold streamed retrain ----
+        costmodel.CHUNK_MEM_BUDGET = budget
+        extra = rows // 10
+        # warm the appended-shape executables (the ragged tail bucket
+        # compiles once per shape) so neither timed path pays compile
+        wrng = np.random.default_rng(99)
+        _lm_run(LineageRuntime(cache=None, fuse=True),
+                np.vstack([Xh, wrng.normal(size=(extra, cols))]),
+                np.concatenate([yh, wrng.normal(size=(extra,))]))
+        t_cold, t_inc, new_chunks, reused_chunks = [], [], 0, 0
+        for r in range(repeats):
+            arng = np.random.default_rng(100 + r)
+            Xa = np.vstack([Xh, arng.normal(size=(extra, cols))])
+            ya = np.concatenate([yh, arng.normal(size=(extra,))])
+            ref = _lm_ref(Xa, ya).ravel()
+
+            cold = LineageRuntime(cache=ReuseCache(), fuse=True)
+            t0 = time.perf_counter()
+            g = _lm_run(cold, Xa, ya)
+            t_cold.append(time.perf_counter() - t0)
+            assert np.abs(g - ref).max() < 1e-10
+
+            warm = LineageRuntime(cache=ReuseCache(), fuse=True)
+            _lm_run(warm, Xh, yh)          # base training populates
+            w = warm.stats.streaming       # the chunk-partial cache
+            b_chunks, b_re = w.chunks, w.chunks_reused
+            t0 = time.perf_counter()
+            g = _lm_run(warm, Xa, ya)
+            t_inc.append(time.perf_counter() - t0)
+            assert np.abs(g - ref).max() < 1e-10
+            new_chunks = w.chunks - b_chunks
+            reused_chunks = w.chunks_reused - b_re
+            assert reused_chunks == b_chunks, \
+                "append shifted existing chunk boundaries"
+        cold_s, inc_s = float(np.median(t_cold)), float(np.median(t_inc))
+        speedup = cold_s / inc_s
+        assert speedup >= min_speedup, \
+            f"append-10% retrain only {speedup:.2f}x " \
+            f"(>= {min_speedup}x required)"
+    finally:
+        costmodel.CHUNK_MEM_BUDGET = saved
+
+    emit("streaming_lmds", t_stream,
+         f"mat_us={t_mat*1e6:.0f};chunks={chunks};"
+         f"peak_live={s.peak_live_bytes}")
+    emit("streaming_append_retrain", inc_s,
+         f"cold_us={cold_s*1e6:.0f};speedup={speedup:.1f}x;"
+         f"new_chunks={new_chunks};reused={reused_chunks}")
+
+    entry = dict(
+        benchmark="streaming_chunked",
+        workload=f"lmDS {rows}x{cols}, budget=nbytes/{budget_ratio}",
+        budget_bytes=budget,
+        chunks=int(chunks),
+        peak_live_bytes=int(s.peak_live_bytes),
+        stream_us_per_call=round(t_stream * 1e6, 1),
+        materialized_us_per_call=round(t_mat * 1e6, 1),
+        stream_overhead=round(t_stream / t_mat, 2),
+        lmds_err=err,
+        pca_err=pca_err,
+        cold_retrain_us_per_call=round(cold_s * 1e6, 1),
+        incremental_retrain_us_per_call=round(inc_s * 1e6, 1),
+        append_speedup=round(speedup, 2),
+        append_new_chunks=int(new_chunks),
+        append_reused_chunks=int(reused_chunks),
+        retraces=0,
+        ts=time.strftime("%Y-%m-%dT%H:%M:%S"),
+    )
+    trajectory = []
+    if os.path.exists(BENCH_JSON):
+        try:
+            with open(BENCH_JSON) as f:
+                trajectory = json.load(f)
+        except Exception:
+            trajectory = []
+    trajectory.append(entry)
+    with open(BENCH_JSON, "w") as f:
+        json.dump(trajectory, f, indent=2)
+    return entry
+
+
+def _as_leaf(Xh):
+    from repro.core.dag import input_tensor
+    return input_tensor("X", Xh)
+
+
+if __name__ == "__main__":
+    import sys
+    sys.path.insert(0, "src")
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    print("name,us_per_call,derived")
+    if "--smoke" in sys.argv:
+        # smaller matrix = noisier ratio on shared CI cores; the full
+        # run holds the paper-target >= 5x bar
+        out = main(rows=16384, repeats=2, min_speedup=2.5)
+    else:
+        out = main()
+    print(json.dumps(out, indent=2))

@@ -330,6 +330,27 @@ SHARD_BASE_OPS: dict[str, Optional[str]] = {
     "shard_colsums": "colSums", "shard_sum": "sum", RESHARD_OP: None,
 }
 
+# Chunked instructions (out-of-core streaming as a compiler placement):
+# generated by `repro.core.compiler.lower_chunked` when a
+# row-partitionable reduction's leaves exceed `costmodel
+# .CHUNK_MEM_BUDGET`. A `chunk_*` op is a *partial* aggregate — its
+# kernel is exactly the base op over whatever rows it is handed, so the
+# streaming runtime can run it per-chunk and sum the partials, while
+# the per-instruction interpreter (which holds full arrays) gets the
+# identical full aggregate from the very same kernel: parity by
+# construction, no unshard-style mode flag needed. `combine` is the
+# explicit materialization boundary closing the streaming scope — the
+# accumulator handoff, an identity on the local path.
+CHUNK_PARTIAL_OPS: frozenset[str] = frozenset({
+    "chunk_gram", "chunk_xtv", "chunk_colsums", "chunk_sum",
+})
+COMBINE_OP = "combine"
+# local/base-equivalent op per chunk op (None: identity)
+CHUNK_BASE_OPS: dict[str, Optional[str]] = {
+    "chunk_gram": "gram", "chunk_xtv": "xtv",
+    "chunk_colsums": "colSums", "chunk_sum": "sum", COMBINE_OP: None,
+}
+
 # Ops that must never be traced into a fused jit segment (data-dependent
 # python control flow, host side effects, dynamic output shapes). The
 # segmenter isolates them into single-instruction segments which the
@@ -636,6 +657,15 @@ def _kernel_cached(op: str, attrs: tuple, shape: tuple,
     if unshard and op in SHARD_BASE_OPS:
         base = SHARD_BASE_OPS[op]
         if base is None:  # reshard of a global array is the identity
+            return lambda x: densify(x)
+        op = base
+    if op in CHUNK_BASE_OPS:
+        # chunk partials ARE the base op over the rows they are handed
+        # (full rows on the interpreter, one chunk on the streaming
+        # path) — route through the base builder so sparse variants and
+        # Pallas kernels apply unchanged
+        base = CHUNK_BASE_OPS[op]
+        if base is None:  # combine: the accumulator handoff
             return lambda x: densify(x)
         op = base
     d = dict(attrs)

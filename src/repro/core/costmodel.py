@@ -24,6 +24,8 @@ available at plan-compile time.
 """
 from __future__ import annotations
 
+import os
+
 import numpy as np
 
 from .dag import SPARSE_THRESHOLD, Node
@@ -139,6 +141,8 @@ def est_cost_s(n: Node) -> float:
     if n.op.startswith("shard_") or n.op == "reshard" \
             or n.placement == "sharded":
         return shard_cost_s(n)
+    if n.op.startswith("chunk_") or n.op == "combine":
+        return chunk_cost_s(n)
     base = HEAVY_OP_BASE_S if n.op in HEAVY_OPS else LIGHT_OP_BASE_S
     return base + max(node_flops(n) / PEAK_FLOPS, node_bytes(n) / PEAK_BW)
 
@@ -434,6 +438,106 @@ def coalesce_wait_s(invariant: list[Node], variant: list[Node],
         return 0.0
     gain = coalesce_gain_s(invariant, variant, k, max_batch)
     return min(max_wait_s, gain / max(k, 1))
+
+
+# ---------------------------------------------------------------------------
+# Chunked (out-of-core) placement: streaming row-partitioned execution
+# under an explicit device-memory budget (ROADMAP item 4)
+# ---------------------------------------------------------------------------
+
+# Device-memory budget for the streaming executor's live working set.
+# Row-partitionable plans whose leaves exceed this are lowered to
+# per-chunk segments with streaming combine; env-overridable so CI can
+# force chunking on toy data (`REPRO_CHUNK_MEM_BUDGET=65536`).
+CHUNK_MEM_BUDGET = int(os.environ.get("REPRO_CHUNK_MEM_BUDGET",
+                                      str(256 << 20)))
+
+# One in-flight chunk's live set is roughly the raw slice, its
+# row-preserving transforms inside the fused segment, and the partial
+# accumulators — budget a fixed multiple of the raw slice bytes.
+CHUNK_LIVE_FACTOR = 4
+
+# Floor on the chunk row bucket: below this the per-chunk dispatch
+# overhead swamps any memory win.
+CHUNK_MIN_ROWS = 16
+
+# Per-chunk control-program overhead on the streaming path: host slice +
+# fingerprint + one warm-executable dispatch with a device sync.
+CHUNK_DISPATCH_S = 30e-6
+
+
+def leaf_row_bytes(n: Node) -> float:
+    """Per-row payload bytes of a row-partitioned leaf, format-aware.
+
+    A BCOO leaf charges its *stored* payload — data plus 2 index coords
+    per stored element, the same accounting `reuse.nbytes` applies to
+    materialized BCOO values — instead of the dense row footprint, so
+    sparse chunking doesn't undershoot the budgeted row count by 1/sp.
+    """
+    from . import backend
+    itemsize = np.dtype(n.dtype).itemsize
+    cols = n.shape[1] if len(n.shape) > 1 else 1
+    if backend.HAS_SPARSE and len(n.shape) == 2 \
+            and backend.leaf_format(n) == backend.BCOO:
+        nse_per_row = float(cols) * max(n.sparsity, 1e-6)
+        return max(nse_per_row * (itemsize + 8), 1.0)  # data + 2×int32
+    return float(cols) * itemsize
+
+
+def chunk_rows(row_bytes: float) -> int:
+    """Chunk row-count for a streaming pass: the largest power of two
+    whose live working set (CHUNK_LIVE_FACTOR × slice bytes) fits in
+    CHUNK_MEM_BUDGET. Power-of-two bucketing means every full chunk of
+    a run shares ONE jit-cache signature (one warm executable), and the
+    bucket depends only on the budget and the row payload — never on the
+    total row count — so appending rows leaves existing chunk
+    boundaries (and their cached partials) intact.
+    """
+    target = CHUNK_MEM_BUDGET / (CHUNK_LIVE_FACTOR * max(row_bytes, 1.0))
+    c = 1 << max(int(target).bit_length() - 1, 0)
+    return max(c, CHUNK_MIN_ROWS)
+
+
+def should_chunk(n: Node) -> bool:
+    """True when a leaf is worth streaming: a 2-D row-partitioned local
+    leaf whose (format-aware) payload exceeds the memory budget."""
+    if n.op != "input" or n.placement != "local" or len(n.shape) != 2:
+        return False
+    if n.attr("batch") is not None:
+        return False
+    rows = n.shape[0]
+    payload = rows * leaf_row_bytes(n)
+    return payload > CHUNK_MEM_BUDGET and rows > chunk_rows(
+        leaf_row_bytes(n))
+
+
+def _chunk_flops(n: Node) -> float:
+    """Total flops of the underlying full-data computation of a chunk
+    partial-aggregate op (work is identical to the base op — chunking
+    changes residency, not arithmetic)."""
+    op = n.op
+    out = _numel(n.shape)
+    if op in ("chunk_gram", "chunk_xtv"):
+        return 2.0 * out * n.inputs[0].shape[0]
+    if op in ("chunk_colsums", "chunk_sum"):
+        return float(max((_numel(i.shape) for i in n.inputs), default=out))
+    return node_flops(n)
+
+
+def chunk_cost_s(n: Node) -> float:
+    """Estimated seconds for one chunked instruction: the base-op
+    roofline over the full data plus the per-chunk dispatch overhead of
+    the streaming loop. `combine` is the materialization boundary — a
+    light accumulator handoff."""
+    if n.op == "combine":
+        return LIGHT_OP_BASE_S + _dense_bytes(n) / PEAK_BW
+    rows = n.inputs[0].shape[0] if n.inputs and n.inputs[0].shape else 1
+    c = chunk_rows(leaf_row_bytes(n.inputs[0])) if n.inputs else 1
+    n_chunks = max(-(-rows // c), 1)
+    base = HEAVY_OP_BASE_S if n.op in ("chunk_gram", "chunk_xtv") \
+        else LIGHT_OP_BASE_S
+    return base + n_chunks * CHUNK_DISPATCH_S + max(
+        _chunk_flops(n) / PEAK_FLOPS, node_bytes(n) / PEAK_BW)
 
 
 def sequential_cost_s(roots_list: list[list[Node]],

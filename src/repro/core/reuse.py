@@ -39,6 +39,10 @@ def nbytes(value) -> int:
     overcharge, and so entries lacking `.nbytes` entirely don't fall
     through to a stub size that would break eviction pressure.
     """
+    if isinstance(value, (tuple, list)):
+        # chunk-level partial-aggregate entries (see the streaming
+        # executor) cache one tuple per row bucket
+        return sum(nbytes(v) for v in value)
     sites = getattr(value, "sites", None)  # FederatedTensor intermediates
     if sites is not None:
         return sum(nbytes(getattr(s, "data", s)) for s in sites)

@@ -19,6 +19,7 @@ reuse stays sound).
 """
 from __future__ import annotations
 
+import hashlib
 import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Optional, Sequence
@@ -32,6 +33,7 @@ from .dag import (LEAVES, LTensor, Node, _fingerprint, _lhash_rec,
 from .federated import ExchangeLog, FederatedTensor, LocalSite
 from .jit_cache import get_jit_cache
 from .reuse import ReuseCache
+from .reuse import nbytes as _reuse_nbytes
 
 
 @dataclass
@@ -60,6 +62,38 @@ class ShardLog:
                     reshards=self.reshards,
                     collectives=self.collectives,
                     collective_bytes=self.collective_bytes)
+
+
+@dataclass
+class StreamLog:
+    """Out-of-core streaming meter (chunked segments, ROADMAP item 4):
+    how many row buckets were dispatched vs served from the chunk-level
+    lineage cache, the payload bytes moved through device memory, and
+    the high-water mark of resident state (one live chunk's inputs plus
+    the running partial aggregates) — the quantity the chunk-size
+    selection bounds by `costmodel.CHUNK_MEM_BUDGET`."""
+
+    chunked_segments: int = 0  # streaming scopes entered (per run)
+    chunks: int = 0            # row-bucket executions dispatched
+    chunks_reused: int = 0     # buckets served from chunk-level lineage
+    combines: int = 0          # partial-aggregate accumulations
+    bytes_streamed: int = 0    # input payload bytes moved per dispatch
+    peak_live_bytes: int = 0   # max resident: live chunk + accumulators
+    full_hits: int = 0         # whole-stream reuse short-circuits
+
+    @property
+    def total(self) -> int:
+        return (self.chunked_segments + self.chunks + self.chunks_reused
+                + self.full_hits)
+
+    def as_dict(self) -> dict:
+        return dict(chunked_segments=self.chunked_segments,
+                    chunks=self.chunks,
+                    chunks_reused=self.chunks_reused,
+                    combines=self.combines,
+                    bytes_streamed=self.bytes_streamed,
+                    peak_live_bytes=self.peak_live_bytes,
+                    full_hits=self.full_hits)
 
 
 @dataclass
@@ -119,6 +153,10 @@ class RuntimeStats:
     # hot-path retraces), populated when this runtime backs a
     # `repro.serving.ModelServer`
     serving: ServingLog = field(default_factory=ServingLog)
+    # out-of-core streaming meter (chunk dispatches / chunk-level reuse
+    # hits / peak resident bytes), populated when the plan contains
+    # `lower_chunked`-placed segments
+    streaming: StreamLog = field(default_factory=StreamLog)
 
     def as_dict(self):
         out = dict(instructions=self.instructions, executed=self.executed,
@@ -133,6 +171,8 @@ class RuntimeStats:
             out["shard"] = self.shard.as_dict()
         if self.serving.total:
             out["serving"] = self.serving.as_dict()
+        if self.streaming.total:
+            out["streaming"] = self.streaming.as_dict()
         # the process-wide compiled-executable cache: hit/miss/eviction
         # counters + resident bytes, surfaced here so long-running
         # sessions can watch cache pressure alongside runtime counters
@@ -314,6 +354,20 @@ class LineageRuntime:
             if leaf_lineage:
                 lin.update(leaf_lineage)
         fmts = plan.formats_for(self.sparse_inputs)
+        # chunk-sliced leaves consumed ONLY by the streaming lane stay
+        # host-resident: the streaming executor sparsifies/uploads one
+        # row bucket at a time, so converting the whole leaf up front
+        # would materialize exactly what out-of-core execution avoids.
+        # A non-chunked consumer (materialization fallback) forces the
+        # ordinary device-format bind, and interpreter mode (fuse=False)
+        # executes chunk ops eagerly on whole values so it needs it too.
+        stream_host: set[int] = set()
+        if getattr(plan, "chunk_sliced", None) and self.fuse:
+            non_chunk = {u for ins in plan.instructions
+                         if ins.target != "chunked"
+                         for u in ins.input_ids}
+            stream_host = {u for u in plan.chunk_sliced
+                           if u not in non_chunk}
         for ins in plan.instructions:
             for inp in ins.node.inputs:
                 if inp.op == "input" and inp.uid not in values:
@@ -336,7 +390,8 @@ class LineageRuntime:
                     # source array without a full-content scan that
                     # costs as much as the conversion itself
                     arr = np.asarray(src)
-                    if fmts.get(inp.uid) == backend.BCOO:
+                    if (fmts.get(inp.uid) == backend.BCOO
+                            and inp.uid not in stream_host):
                         arr = backend.sparsify(arr)
                     values[inp.uid] = arr
         for r in plan.roots:  # outputs that are themselves leaves
@@ -434,6 +489,14 @@ class LineageRuntime:
                 fsig = ",".join(fmts.get(u, backend.DENSE)
                                 for u in boundary)
                 seg_key = f"{seg_key}|f:{fsig}"
+            if getattr(seg, "chunked", False):
+                # streaming lane: dispatch the segment once per row
+                # bucket and sum the partial aggregates — probes and
+                # cache puts happen inside (per output AND per chunk)
+                self._run_chunked_segment(plan, seg, seg_key, fmts,
+                                          values, lin, lmemo, jcache)
+                self._free(values, seg.frees)
+                continue
             if batched:
                 axes = "".join("0" if u in bctx.bvals else "-"
                                for u in seg.input_uids)
@@ -591,6 +654,210 @@ class LineageRuntime:
         self.stats.executed += len(seg.instructions) - 1
         for uid, val in zip(rest, outs, strict=True):
             values[uid] = val
+
+    # ------------------------------------------------------------------
+    def _run_chunked_segment(self, plan: Plan, seg, seg_key: str,
+                             fmts: dict, values: dict[int, Any],
+                             lin: dict[int, str], lmemo: dict[int, str],
+                             jcache) -> None:
+        """Streaming executor for a chunked-target segment (out-of-core
+        execution, ROADMAP item 4).
+
+        The segment's sliced inputs (`plan.chunk_sliced`) are visited in
+        row buckets sized by `costmodel.chunk_rows` from the ACTUAL
+        per-row payload (BCOO-formatted inputs charged at their sparse
+        data+indices size), so one live chunk plus the running partial
+        aggregates stay under `costmodel.CHUNK_MEM_BUDGET`. The bucket
+        is a power of two independent of the total row count, so every
+        full bucket shares ONE warm jit executable (the ragged tail
+        compiles a second, once) and appending rows never shifts the
+        earlier bucket boundaries.
+
+        Reuse happens at two granularities:
+
+          * full aggregates — each probe-flagged output's lineage hash
+            is probed before any chunk is dispatched; when every output
+            hits, the whole stream is skipped (the segment-final probe
+            of ordinary segments, applied per output);
+          * chunk level (incremental recompute) — each bucket's partial
+            tuple is cached under a key of the segment structure, the
+            row range, and content fingerprints of the bucket's slices
+            (plus the replicated operands, which shift every bucket when
+            they change). Appending or correcting rows recomputes ONLY
+            the affected buckets; untouched ones hit.
+        """
+        reuse = self.cache is not None
+        log = self.stats.streaming
+        out_set = set(seg.output_uids)
+        out_ins = {ins.out_id: ins for ins in seg.instructions
+                   if ins.out_id in out_set}
+        # ---- full-aggregate probes (one per probe-flagged output, the
+        # same set the fuse=False interpreter probes) ----
+        lhashes: dict[int, str] = {}
+        hits: dict[int, Any] = {}
+        if reuse:
+            for uid in seg.output_uids:
+                if not out_ins[uid].probe:
+                    continue
+                lh = _lhash_rec(out_ins[uid].node, lin, lmemo)
+                lhashes[uid] = lh
+                got = self.cache.probe(lh)
+                if got is not None:
+                    hits[uid] = got
+        # short-circuit iff every output is either a cache-hit partial
+        # aggregate or a chunk-invariant generator (a target-neutral
+        # literal that rode along) — escaping chunked-placement values
+        # have inputs and always force the stream to run
+        if hits and all(uid in hits or not out_ins[uid].node.inputs
+                        for uid in seg.output_uids):
+            for uid in seg.output_uids:
+                if uid in hits:
+                    values[uid] = _coerce_format(
+                        hits[uid], fmts.get(uid, backend.DENSE))
+                else:
+                    values[uid] = backend.kernel_for_node(
+                        out_ins[uid].node)()
+            self.stats.reused += len(hits)
+            self.stats.executed += len(seg.output_uids) - len(hits)
+            log.full_hits += 1
+            return
+
+        sliced = [u for u in seg.input_uids if u in plan.chunk_sliced]
+        if not sliced:  # defensive: nothing to stream over — the chunk
+            # kernels ARE the base ops, so one whole-input dispatch is
+            # exact
+            outs = self._execute_cached(
+                seg_key, self._seg_builder(seg, fmts, None),
+                [values[u] for u in seg.input_uids], jcache)
+            for uid, val in zip(seg.output_uids, outs, strict=True):
+                values[uid] = val
+            self.stats.executed += len(seg.instructions)
+            return
+
+        log.chunked_segments += 1
+        host: dict[int, np.ndarray] = {}
+        for u in sliced:
+            a = values[u]
+            if backend.is_sparse(a):
+                # materialization fallback for a sparse interior value
+                # entering the stream row-aligned (leaves are kept
+                # host-dense by _bind_leaves; this is the rare rest)
+                a = a.todense()
+            host[u] = np.asarray(a)
+        rows = host[sliced[0]].shape[0]
+        for u in sliced[1:]:
+            if host[u].shape[0] != rows:
+                raise ValueError(
+                    f"chunked segment {seg.index}: sliced inputs "
+                    f"disagree on rows ({host[u].shape[0]} vs {rows})")
+        row_bytes = 0.0
+        for u in sliced:
+            a = host[u]
+            if fmts.get(u) == backend.BCOO:
+                # BCOO slice payload: data + 2 int32 index columns,
+                # charged at 2x for the nse power-of-two padding bucket
+                # (see backend.sparsify) — the reuse.nbytes accounting
+                nnz = int(np.count_nonzero(a))
+                row_bytes += (2.0 * nnz / max(rows, 1)
+                              * (a.dtype.itemsize + 8))
+            else:
+                row_bytes += a.nbytes / max(rows, 1)
+        c = costmodel.chunk_rows(row_bytes)
+        n_chunks = max(1, -(-rows // c))
+        # replicated operands are fingerprinted once: they are part of
+        # every chunk's identity (a changed mean shifts every bucket)
+        rep_fp = ""
+        if reuse:
+            rep_fp = "|".join(
+                _fingerprint(np.asarray(backend.densify(values[u])))
+                for u in seg.input_uids if u not in host)
+        cost_each = (sum(i.est_cost_s for i in out_ins.values())
+                     / n_chunks)
+        builder = self._seg_builder(seg, fmts, None)
+        # per-output accumulation mode: chunk_* partials SUM across row
+        # buckets; an escaping chunked-placement value (consumed by a
+        # later scope through a local boundary) is materialized
+        # piecewise — its buckets CONCAT back to the full rows; anything
+        # else is a target-neutral generator that rode along and is
+        # chunk-invariant — the first bucket's value stands
+        modes = {}
+        for uid in seg.output_uids:
+            n = out_ins[uid].node
+            if n.op.startswith("chunk_"):
+                modes[uid] = "sum"
+            elif n.placement == "chunked":
+                modes[uid] = "concat"
+            else:
+                modes[uid] = "keep"
+        accs: dict[int, Any] = {u: None for u in seg.output_uids}
+        for s in range(0, rows, c):
+            e = min(s + c, rows)
+            parts, ckey, live = None, None, 0
+            if reuse:
+                fps = ",".join(_fingerprint(host[u][s:e])
+                               for u in sliced)
+                ckey = hashlib.sha1(
+                    f"chunkpart|{seg_key}|{s}:{e}|{rep_fp}|{fps}"
+                    .encode()).hexdigest()
+                parts = self.cache.probe(ckey)
+                if parts is not None:
+                    log.chunks_reused += 1
+            if parts is None:
+                args = []
+                for u in seg.input_uids:
+                    if u in host:
+                        a = host[u][s:e]
+                        if fmts.get(u) == backend.BCOO:
+                            a = backend.sparsify(a)
+                        live += _reuse_nbytes(a)
+                        args.append(a)
+                    else:
+                        args.append(values[u])
+                outs = self._execute_cached(seg_key, builder, args,
+                                            jcache)
+                # partials densify to HOST arrays: their only consumer
+                # is the `combine` densify boundary, numpy accumulators
+                # add chunk-by-chunk regardless of the slice's format,
+                # and host adds skip the per-op device dispatch that
+                # would otherwise dominate warm (all-chunks-reused) runs
+                parts = tuple(np.asarray(backend.densify(o))
+                              for o in outs)
+                log.chunks += 1
+                log.bytes_streamed += live
+                if ckey is not None:
+                    self.cache.put(ckey, parts, cost_each, gated=False)
+            for uid, p in zip(seg.output_uids, parts, strict=True):
+                prev = accs[uid]
+                mode = modes[uid]
+                if mode == "concat":
+                    accs[uid] = [p] if prev is None else prev + [p]
+                elif prev is None:
+                    accs[uid] = p
+                elif mode == "sum":
+                    accs[uid] = prev + p
+                    log.combines += 1
+                # "keep": chunk-invariant — the first value stands
+            acc_bytes = sum(_reuse_nbytes(v) for v in accs.values()
+                            if v is not None)
+            log.peak_live_bytes = max(log.peak_live_bytes,
+                                      live + acc_bytes)
+        for uid, m in modes.items():
+            if m == "concat" and accs[uid] is not None:
+                accs[uid] = np.concatenate(accs[uid], axis=0)
+        # cached full aggregates win (identical values, mirrors the
+        # interpreter's per-instruction hits); streamed accumulators
+        # fill the rest and populate the cache
+        for uid in seg.output_uids:
+            if uid in hits:
+                values[uid] = _coerce_format(
+                    hits[uid], fmts.get(uid, backend.DENSE))
+            else:
+                values[uid] = accs[uid]
+                if uid in lhashes:
+                    self.cache.put(lhashes[uid], accs[uid],
+                                   out_ins[uid].est_cost_s, gated=False)
+        self.stats.reused += len(hits)
+        self.stats.executed += len(seg.instructions) - len(hits)
 
     # ------------------------------------------------------------------
     def _exec_one(self, ins, values: dict[int, Any], fmts: dict,

@@ -31,6 +31,12 @@ Segment boundaries are forced by:
     `shard_map`-wrapped closure (`build_sharded_segment_fn`), so the
     whole chain — elementwise riders, per-shard partial reduce, psum —
     fuses into a single collective-carrying executable
+  * chunked-target runs — instructions lowered for out-of-core
+    streaming (`placement='chunked'` prefixes and the `chunk_*` partial
+    aggregates) group into `chunked` segments via the ordinary
+    target-change rule; the runtime dispatches one warm executable per
+    row chunk and sums the partials, with the `combine` boundary (a
+    local instruction) closing the streaming scope
   * non-traceable ops — anything in `backend.NON_TRACEABLE_OPS` (the
     `fed_*` site-orchestration ops, `collect` exchange boundaries, and
     host ops like `quantile`) runs in its own segment, outside any jit
@@ -79,6 +85,9 @@ class Segment:
     variant: bool = False         # carries the config batch axis (vmapped)
     sharded: bool = False         # shard-exec lane: lowered via shard_map
                                   # over the device mesh's data axis
+    chunked: bool = False         # streaming lane: the runtime dispatches
+                                  # this executable once per row chunk and
+                                  # sums the partial aggregates
 
     @property
     def fused(self) -> bool:
@@ -143,8 +152,13 @@ def segment_plan(plan: "Plan", reuse_active: bool,
         start_new = (
             not groups
             # a probe point must be segment-final so its value is
-            # observable for cache probe/put: break after it
-            or (reuse_active and groups[-1][-1].probe)
+            # observable for cache probe/put: break after it — except in
+            # the chunked lane, where the streaming executor probes and
+            # populates every probe-flagged segment OUTPUT itself (a
+            # break there would force the chunked prefix to materialize
+            # between two streaming scopes, defeating out-of-core)
+            or (reuse_active and groups[-1][-1].probe
+                and groups[-1][-1].target != "chunked")
             or groups[-1][-1].node.op in backend.NON_TRACEABLE_OPS
             or ins.node.op in backend.NON_TRACEABLE_OPS
             or (not neutral and cur_target is not None
@@ -225,7 +239,10 @@ def segment_plan(plan: "Plan", reuse_active: bool,
                              group_targets[si]
                              + ("+sh" if group_sharded[si] else "")),
             variant=group_variant[si],
-            sharded=group_sharded[si]))
+            sharded=group_sharded[si],
+            # target-change boundaries already isolate the streaming
+            # lane; the flag routes the group to the streaming executor
+            chunked=group_targets[si] == "chunked"))
     return segments
 
 
