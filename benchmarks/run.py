@@ -35,6 +35,11 @@ Prints ``name,us_per_call,derived`` CSV lines.
                           peak_live_bytes, one warm executable) and
                           lineage-driven incremental retrain after a
                           10% row append (BENCH_streaming.json)
+  pipeline_*            — ISSUE 9: async pipelined dispatch at depth 2
+                          (chunk prefetch + buffer donation + serving
+                          rebatching) vs the depth-1 synchronous
+                          executor, parity asserted at both lanes
+                          (BENCH_pipeline.json)
 
 Every run ends with a summary table aggregating the latest entry of all
 ``BENCH_*.json`` trajectories.
@@ -96,7 +101,10 @@ def aggregate() -> None:
                 or k.endswith("_p50_us") or k.endswith("_p99_us")
                 or k.endswith("_qps")
                 # streaming residency columns (BENCH_streaming)
-                or k.endswith("chunks") or k == "peak_live_bytes")
+                or k.endswith("chunks") or k == "peak_live_bytes"
+                # async-pipeline columns (BENCH_pipeline)
+                or k == "overlap_ratio" or k == "rebatches"
+                or k == "donated_buffers")
             rows.append((name,
                          str(entry.get("benchmark", "?")),
                          str(entry.get("workload", ""))[:46],
@@ -120,8 +128,9 @@ def aggregate() -> None:
 def main() -> None:
     if "--smoke" in sys.argv:
         from benchmarks import (distributed_bench, federated_bench,
-                                fusion_bench, parfor_bench, serving_bench,
-                                sparse_bench, streaming_bench)
+                                fusion_bench, parfor_bench, pipeline_bench,
+                                serving_bench, sparse_bench,
+                                streaming_bench)
         print("name,us_per_call,derived")
         fusion_bench.main(rows=500, cols=32, calls=20, repeats=2)
         sparse_bench.main(rows=512, cols=64, calls=10, repeats=2)
@@ -135,12 +144,16 @@ def main() -> None:
         serving_bench.main(d=64, n=256, concurrency=8, max_batch=8,
                            rates=(500.0, 1000.0), openloop_n=120)
         streaming_bench.main(rows=16384, repeats=2, min_speedup=2.5)
+        pipeline_bench.main(rows=16384, repeats=2, min_speedup=1.05,
+                            d=64, rate=2600.0, openloop_n=300,
+                            qps_floor=1200.0)
         aggregate()
         return
     from benchmarks import (cv_reuse, distributed_bench, federated_bench,
                             fusion_bench, hpo_baseline, hpo_reuse,
-                            kernel_bench, parfor_bench, roofline_bench,
-                            serving_bench, sparse_bench, streaming_bench)
+                            kernel_bench, parfor_bench, pipeline_bench,
+                            roofline_bench, serving_bench, sparse_bench,
+                            streaming_bench)
     quick = "--quick" in sys.argv
     ks = (1, 5, 10) if quick else (1, 5, 10, 20)
     print("name,us_per_call,derived")
@@ -160,6 +173,10 @@ def main() -> None:
     streaming_bench.main(rows=65536 if quick else 131072,
                          repeats=2 if quick else 3,
                          min_speedup=3.0 if quick else 5.0)
+    pipeline_bench.main(rows=65536 if quick else 131072,
+                        repeats=2 if quick else 3,
+                        min_speedup=1.1 if quick else 1.15,
+                        qps_floor=1800.0 if quick else 2105.0)
     aggregate()
 
 

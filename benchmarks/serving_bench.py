@@ -82,14 +82,18 @@ def _closed_loop(server, script, rows, concurrency: int) -> dict:
 def _open_loop(server, d: int, rate_qps: float, n: int, seed: int) -> dict:
     """Seeded-Poisson open-loop load: one thread per request fires at
     its scheduled arrival regardless of completions (no coordinated
-    omission); reports per-request latency percentiles and sustained
-    QPS over the span from first arrival to last completion."""
+    omission); reports per-request latency percentiles, sustained QPS
+    over the span from first arrival to last completion, and queue-idle
+    time — span minus dispatch-stage busy seconds
+    (`ServingLog.busy_s`), i.e. how much headroom the request path
+    still has at this offered rate."""
     rng = np.random.default_rng(seed)
     gaps = rng.exponential(1.0 / rate_qps, size=n)
     arrivals = np.cumsum(gaps)
     rows = [rng.normal(size=(1, d)) for _ in range(n)]
     lat_us = [0.0] * n
     done_at = [0.0] * n
+    busy0 = server.runtime.stats.serving.busy_s
     start = time.perf_counter() + 0.05   # common epoch for all threads
 
     def fire(i):
@@ -109,8 +113,12 @@ def _open_loop(server, d: int, rate_qps: float, n: int, seed: int) -> dict:
         t.join()
     span = max(done_at) - (start + float(arrivals[0]))
     p50, p99 = np.percentile(lat_us, [50, 99])
+    busy = server.runtime.stats.serving.busy_s - busy0
+    idle = max(span - busy, 0.0)
     return dict(rate=rate_qps, n=n, p50_us=float(p50), p99_us=float(p99),
-                qps=n / span)
+                qps=n / span, busy_s=float(busy),
+                queue_idle_s=float(idle),
+                idle_frac=float(idle / span) if span > 0 else 0.0)
 
 
 def main(d: int = COLS, n: int = 512, concurrency: int = 16,
@@ -148,7 +156,8 @@ def main(d: int = COLS, n: int = 512, concurrency: int = 16,
     for runm in open_runs:
         emit(f"serving_openloop_{int(runm['rate'])}qps",
              runm["p50_us"] * 1e-6,
-             f"p99_us={runm['p99_us']:.0f};qps={runm['qps']:.0f}")
+             f"p99_us={runm['p99_us']:.0f};qps={runm['qps']:.0f};"
+             f"idle_frac={runm['idle_frac']:.2f}")
 
     entry = dict(
         benchmark="serving_coalesce",
@@ -170,6 +179,7 @@ def main(d: int = COLS, n: int = 512, concurrency: int = 16,
         entry[f"{tag}_p50_us"] = round(runm["p50_us"], 1)
         entry[f"{tag}_p99_us"] = round(runm["p99_us"], 1)
         entry[f"{tag}_qps"] = round(runm["qps"], 1)
+        entry[f"{tag}_idle_frac"] = round(runm["idle_frac"], 3)
 
     server.shutdown()
 

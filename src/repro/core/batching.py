@@ -443,3 +443,16 @@ def pad_batch(arr: np.ndarray, bucket: int) -> np.ndarray:
         return arr
     pad = np.repeat(arr[-1:], bucket - k, axis=0)
     return np.concatenate([arr, pad], axis=0)
+
+
+def stack_requests(request_arg_lists: Sequence[Sequence[np.ndarray]],
+                   n_args: int) -> list[np.ndarray]:
+    """Stack k per-request argument lists into the one-array-per-arg
+    layout `LineageRuntime.replay_batch` consumes.
+
+    Split out of `ModelServer._dispatch` so the serving pipeline's
+    issue stage can prep batch N+1's host-side stacking while batch N
+    is still in flight on the completion worker (continuous
+    rebatching)."""
+    return [np.stack([reqs[i] for reqs in request_arg_lists])
+            for i in range(n_args)]

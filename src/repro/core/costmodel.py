@@ -498,6 +498,64 @@ def chunk_rows(row_bytes: float) -> int:
     return max(c, CHUNK_MIN_ROWS)
 
 
+# ---------------------------------------------------------------------------
+# Asynchronous pipelined dispatch (ROADMAP items 1/2/4 "Remaining"):
+# how deep the runtime may run ahead of the device
+# ---------------------------------------------------------------------------
+
+# Spawning/joining a prefetch worker and keeping a second bucket live
+# costs roughly one chunk dispatch of control-program overhead; below
+# that, pipelining is pure tax.
+PIPELINE_MIN_GAIN_S = CHUNK_DISPATCH_S
+
+
+def pipeline_depth() -> int:
+    """Resolved async-dispatch depth for the runtime's segment executor.
+
+    ``REPRO_PIPELINE_DEPTH`` is the deployment surface: ``1`` forces the
+    fully synchronous PR-8 behaviour (bitwise- and meter-identical to
+    the pre-pipeline runtime), ``>=2`` forces async dispatch with that
+    much chunk-prefetch lookahead. Unset/0 means auto, which defaults to
+    2: deferred device sync is free in the worst case (XLA dispatches
+    asynchronously regardless), so only an explicit operator override
+    should pin the runtime to the blocking path.
+
+    Read per plan run, not at import, so one process can compare both
+    modes (the pipeline benchmark does exactly that).
+    """
+    env = int(os.environ.get("REPRO_PIPELINE_DEPTH", "0") or 0)
+    if env >= 1:
+        return env
+    return 2
+
+
+def pipeline_gain_s(row_bytes: float) -> float:
+    """Estimated host-prep seconds per streaming bucket that depth>=2
+    prefetch can overlap with device compute: slicing + block-checksum
+    traffic of one bucket at memory bandwidth (the prep is bandwidth-
+    bound — two passes over the slice payload)."""
+    return 2.0 * chunk_rows(row_bytes) * max(row_bytes, 1.0) / PEAK_BW
+
+
+def prefetch_depth(row_bytes: float, n_chunks: int) -> int:
+    """Chunk-prefetch lookahead for one streaming scope.
+
+    An explicit ``REPRO_PIPELINE_DEPTH`` wins (capped at the chunk
+    count — looking further ahead than the stream is meaningless). In
+    auto mode the gate is economic: prefetch only when there is more
+    than one bucket AND the overlappable host prep per bucket clears
+    the control-program cost of running the worker at all
+    (`PIPELINE_MIN_GAIN_S`). Depth 1 is always the fallback and means
+    the exact synchronous loop.
+    """
+    env = int(os.environ.get("REPRO_PIPELINE_DEPTH", "0") or 0)
+    if env >= 1:
+        return max(1, min(env, n_chunks))
+    if n_chunks < 2 or pipeline_gain_s(row_bytes) <= PIPELINE_MIN_GAIN_S:
+        return 1
+    return min(2, n_chunks)
+
+
 def should_chunk(n: Node) -> bool:
     """True when a leaf is worth streaming: a 2-D row-partitioned local
     leaf whose (format-aware) payload exceeds the memory budget."""

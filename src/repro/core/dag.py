@@ -329,10 +329,18 @@ class _LeafRegistry:
     def __init__(self):
         self.values: dict[int, Any] = {}
         self.lineage: dict[int, str] = {}
+        # per-leaf 4 KiB block-sum tables retained from the bind-time
+        # content fingerprint (~0.2% of the leaf) — the streaming
+        # executor's prefetch path DERIVES aligned slice fingerprints
+        # from them instead of re-scanning the slices (see
+        # `_slice_fingerprint`). Same soundness contract as `lineage`:
+        # valid until the leaf is re-bound.
+        self.fp_tables: dict[int, np.ndarray] = {}
 
     def bind(self, node: Node, value, lineage_id: str):
         self.values[node.uid] = value
         self.lineage[node.uid] = lineage_id
+        self.fp_tables.pop(node.uid, None)
 
 
 LEAVES = _LeafRegistry()
@@ -357,6 +365,37 @@ def _fp_weights(n: int) -> np.ndarray:
 _FP_BLOCK = 512  # uint64 words per checksum block (4 KiB)
 
 
+def _fingerprint_and_table(arr: np.ndarray
+                           ) -> tuple[str, Optional[np.ndarray]]:
+    """`_fingerprint` that also returns the per-4 KiB block-sum table
+    the large-buffer path reduces over (None on the small/raw path).
+    The table is a free by-product of the scan the fingerprint already
+    does; retaining it at leaf-bind time lets aligned slice
+    fingerprints be *derived* later without touching the slice payload
+    again (`_slice_fingerprint` — the streaming prefetch fast path)."""
+    a = np.ascontiguousarray(arr)
+    h = hashlib.sha1()
+    h.update(str(a.shape).encode())
+    h.update(str(a.dtype).encode())
+    raw = a.view(np.uint8).reshape(-1)
+    if raw.size <= 65536:
+        h.update(raw.tobytes())
+        return h.hexdigest(), None
+    head = raw.size - (raw.size % 8)
+    u = raw[:head].view(np.uint64)
+    nb = u.size // _FP_BLOCK
+    table = None
+    if nb:
+        blocks = u[: nb * _FP_BLOCK].reshape(nb, _FP_BLOCK)
+        table = blocks.sum(axis=1, dtype=np.uint64)
+        acc = (table * _fp_weights(nb)).sum(dtype=np.uint64)
+        h.update(int(acc).to_bytes(8, "little"))
+        u = u[nb * _FP_BLOCK:]
+    h.update(u.tobytes())
+    h.update(raw[head:].tobytes())
+    return h.hexdigest(), table
+
+
 def _fingerprint(arr: np.ndarray) -> str:
     """Cheap, deterministic content fingerprint for input lineage.
 
@@ -369,24 +408,50 @@ def _fingerprint(arr: np.ndarray) -> str:
     sum (~0.2ms / 2 MB). Known insensitivity: permuting words WITHIN
     one 4 KiB block preserves its sum — far below the granularity of
     any chunk or leaf this keys."""
-    a = np.ascontiguousarray(arr)
+    return _fingerprint_and_table(arr)[0]
+
+
+_FP_BLOCK_BYTES = _FP_BLOCK * 8  # 4 KiB
+
+
+def _slice_fingerprint(sl: np.ndarray, table: np.ndarray,
+                       byte_offset: int) -> Optional[str]:
+    """Derive `_fingerprint(sl)` from the parent buffer's block-sum
+    table without re-scanning the slice's full 4 KiB blocks.
+
+    `sl` must be a contiguous slice of the table's parent starting
+    `byte_offset` bytes in. Derivation is exact — bitwise the same hex
+    digest `_fingerprint(sl)` computes — because the weight sequence is
+    prefix-stable across lengths (`_fp_weights(n)` draws the same
+    stream for every n) and the slice's own 4 KiB blocking coincides
+    with the parent's whenever `byte_offset` is 4 KiB-aligned. Returns
+    None when not derivable (unaligned offset, or the slice takes the
+    small raw-bytes path): callers fall back to `_fingerprint`.
+
+    Only the residual words past the last full block (< 4 KiB) are
+    read from the slice itself, so deriving a bucket fingerprint is
+    O(table slice) instead of O(bucket bytes) — the host-prep scan the
+    streaming pipeline removes.
+    """
+    if byte_offset % _FP_BLOCK_BYTES:
+        return None
+    raw_n = sl.nbytes
+    if raw_n <= 65536:
+        return None  # raw path hashes actual bytes — nothing to derive
+    head = raw_n - (raw_n % 8)
+    nb = (head // 8) // _FP_BLOCK
+    first = byte_offset // _FP_BLOCK_BYTES
+    if first + nb > table.size:
+        return None  # slice's full blocks overrun the parent's table
     h = hashlib.sha1()
-    h.update(str(a.shape).encode())
-    h.update(str(a.dtype).encode())
-    raw = a.view(np.uint8).reshape(-1)
-    if raw.size <= 65536:
-        h.update(raw.tobytes())
-        return h.hexdigest()
-    head = raw.size - (raw.size % 8)
-    u = raw[:head].view(np.uint64)
-    nb = u.size // _FP_BLOCK
+    h.update(str(sl.shape).encode())
+    h.update(str(sl.dtype).encode())
     if nb:
-        blocks = u[: nb * _FP_BLOCK].reshape(nb, _FP_BLOCK)
-        acc = (blocks.sum(axis=1, dtype=np.uint64)
+        acc = (table[first:first + nb]
                * _fp_weights(nb)).sum(dtype=np.uint64)
         h.update(int(acc).to_bytes(8, "little"))
-        u = u[nb * _FP_BLOCK:]
-    h.update(u.tobytes())
+    raw = np.ascontiguousarray(sl).view(np.uint8).reshape(-1)
+    h.update(raw[nb * _FP_BLOCK_BYTES:head].tobytes())
     h.update(raw[head:].tobytes())
     return h.hexdigest()
 
@@ -451,6 +516,15 @@ def input_tensor(name: Optional[str], value, sparsity: Optional[float] = None,
             sparsity = 1.0
     name = name or f"in{next(_input_counter)}"
     node = make_node("input", (), arr.shape, arr.dtype, sparsity, name=name)
-    lid = lineage_id or f"{name}:{_fingerprint(arr)}"
+    table = None
+    if lineage_id is None:
+        fp, table = _fingerprint_and_table(arr)
+        lid = f"{name}:{fp}"
+    else:
+        lid = lineage_id
     LEAVES.bind(node, arr, lid)
+    if table is not None:
+        # retained for slice-fingerprint derivation on the streaming
+        # prefetch path — a free by-product of the scan above
+        LEAVES.fp_tables[node.uid] = table
     return LTensor(node)

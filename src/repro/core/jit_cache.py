@@ -157,17 +157,33 @@ class JitProgramCache:
         self.stats.misses += 1
         return key, None
 
-    def compile(self, key: tuple, fn: Callable, args
-                ) -> tuple[Callable, float]:
+    def compile(self, key: tuple, fn: Callable, args,
+                donate_argnums: tuple = ()) -> tuple[Callable, float]:
         """Compile `fn` for `args`, store under `key`; returns
-        (executable, trace_seconds)."""
+        (executable, trace_seconds).
+
+        `donate_argnums` marks dead-after-segment arguments whose
+        buffers XLA may alias into the outputs (the async pipeline's
+        `_free`-uid candidates). Donation is baked into the caller's
+        `key` (a `|don:` seg-key suffix), so a donated executable can
+        never be replayed with live arguments under the plain key."""
         t0 = time.perf_counter()
-        jitted = jax.jit(fn)
+        jitted = jax.jit(fn, donate_argnums=donate_argnums) \
+            if donate_argnums else jax.jit(fn)
         if hasattr(jitted, "lower"):
             # Genuine trace/compile errors propagate immediately — masking
             # them here would cache a broken wrapper that re-raises on
             # every subsequent run with a misleading 'fallback' stat.
-            exe: Any = jitted.lower(*args).compile()
+            if donate_argnums:
+                # XLA warns when a donated buffer finds no same-
+                # shape/dtype output to alias — harmless (the buffer is
+                # dead either way) and would spam every compile
+                with warnings.catch_warnings():
+                    warnings.filterwarnings(
+                        "ignore", message=".*[Dd]onat.*")
+                    exe: Any = jitted.lower(*args).compile()
+            else:
+                exe = jitted.lower(*args).compile()
         else:  # pragma: no cover - AOT API unavailable on this jax
             warnings.warn("jax.jit(...).lower unavailable; segment will "
                           "use dispatch-path jit", RuntimeWarning,

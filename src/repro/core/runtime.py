@@ -21,6 +21,8 @@ from __future__ import annotations
 
 import hashlib
 import time
+from collections import deque
+from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
 from typing import Any, Callable, Optional, Sequence
 
@@ -29,6 +31,7 @@ import numpy as np
 from . import backend, costmodel
 from .compiler import Plan, compile_plan
 from .dag import (LEAVES, LTensor, Node, _fingerprint, _lhash_rec,
+                  _slice_fingerprint,
                   input_tensor)  # _fingerprint: PreparedScript lineage
 from .federated import ExchangeLog, FederatedTensor, LocalSite
 from .jit_cache import get_jit_cache
@@ -114,6 +117,10 @@ class ServingLog:
     # stay 0 in steady state, and the serving benchmark asserts it.
     retraces: int = 0
     queue_wait_s: float = 0.0  # total enqueue->dispatch delay
+    # seconds the dispatch stage spent replaying batches — open-loop
+    # benchmarks subtract this from wall span to report queue-idle time
+    # (how much headroom the request path has at a given arrival rate)
+    busy_s: float = 0.0
 
     @property
     def total(self) -> int:
@@ -124,9 +131,63 @@ class ServingLog:
                    max_coalesce=self.max_coalesce, padded=self.padded,
                    queue_peak=self.queue_peak, rejected=self.rejected,
                    retraces=self.retraces,
-                   queue_wait_s=round(self.queue_wait_s, 6))
+                   queue_wait_s=round(self.queue_wait_s, 6),
+                   busy_s=round(self.busy_s, 6))
         if self.batches:
             out["mean_coalesce"] = round(self.requests / self.batches, 2)
+        return out
+
+
+@dataclass
+class PipelineLog:
+    """Asynchronous-dispatch meter (the pipelined execution engine that
+    closes ROADMAP items 1/2/4's carried "Remaining" bullets).
+
+    At pipeline depth >= 2 the segment executor stops syncing the
+    device at segment boundaries: `dispatch_s` is host time spent
+    *issuing* executables (XLA computes in the background), `block_s`
+    is host time actually blocked materializing results at plan roots /
+    probe points / host-op boundaries, and `prefetch_s` is worker time
+    spent prepping streaming buckets concurrently with device compute.
+    All counters stay 0 at depth 1 (`REPRO_PIPELINE_DEPTH=1`), which is
+    what keeps the depth-1 `as_dict()` bitwise-identical to the
+    pre-pipeline runtime."""
+
+    async_segments: int = 0   # dispatches returned without a device sync
+    dispatch_s: float = 0.0   # host seconds issuing async dispatches
+    block_s: float = 0.0      # host seconds blocked materializing results
+    prefetch_s: float = 0.0   # worker seconds prepping buckets (overlapped)
+    prefetch_issued: int = 0  # bucket preps handed to the worker
+    prefetch_hits: int = 0    # prepped buckets consumed by a dispatch
+    prefetch_cancelled: int = 0  # prepped buckets discarded (cache hit
+                                 # raced the prep, or error shutdown)
+    donated_buffers: int = 0  # dead intermediate buffers donated to XLA
+    donated_bytes: int = 0    # their payload bytes
+    rebatches: int = 0        # serving batches coalesced while another
+                              # batch was still in flight
+
+    @property
+    def total(self) -> int:
+        return (self.async_segments + self.prefetch_issued
+                + self.donated_buffers + self.rebatches)
+
+    def as_dict(self) -> dict:
+        out = dict(async_segments=self.async_segments,
+                   dispatch_s=round(self.dispatch_s, 6),
+                   block_s=round(self.block_s, 6),
+                   prefetch_s=round(self.prefetch_s, 6),
+                   prefetch_issued=self.prefetch_issued,
+                   prefetch_hits=self.prefetch_hits,
+                   prefetch_cancelled=self.prefetch_cancelled,
+                   donated_buffers=self.donated_buffers,
+                   donated_bytes=self.donated_bytes,
+                   rebatches=self.rebatches)
+        # share of pipeline host time spent on useful (overlappable)
+        # work — issuing dispatches and prepping buckets — vs blocked
+        # waiting on the device; 1.0 means the host never waited
+        busy = self.dispatch_s + self.prefetch_s
+        wall = busy + self.block_s
+        out["overlap_ratio"] = round(busy / wall, 4) if wall > 0 else 0.0
         return out
 
 
@@ -157,6 +218,9 @@ class RuntimeStats:
     # hits / peak resident bytes), populated when the plan contains
     # `lower_chunked`-placed segments
     streaming: StreamLog = field(default_factory=StreamLog)
+    # async-dispatch meter (deferred sync / donation / prefetch /
+    # rebatching), populated only at pipeline depth >= 2
+    pipeline: PipelineLog = field(default_factory=PipelineLog)
 
     def as_dict(self):
         out = dict(instructions=self.instructions, executed=self.executed,
@@ -173,11 +237,33 @@ class RuntimeStats:
             out["serving"] = self.serving.as_dict()
         if self.streaming.total:
             out["streaming"] = self.streaming.as_dict()
+        if self.pipeline.total:
+            out["pipeline"] = self.pipeline.as_dict()
         # the process-wide compiled-executable cache: hit/miss/eviction
         # counters + resident bytes, surfaced here so long-running
         # sessions can watch cache pressure alongside runtime counters
         out["jit_cache"] = get_jit_cache().stats.as_dict()
         return out
+
+
+@dataclass
+class _RunCtx:
+    """Per-run execution context of the async pipeline.
+
+    `depth` is the resolved `costmodel.pipeline_depth()` for this run
+    (1 = fully synchronous PR-8 behaviour — every gate in the executor
+    keys off it). `owned` tracks uids whose CURRENT value is a device
+    buffer produced by traced segment execution *this run* and not
+    referenced anywhere the runtime cannot see — the run-time half of
+    the `donate_argnums` decision: a uid is donatable only while it is
+    here, and leaves it the moment the reuse cache takes a reference
+    (`put`). Leaf values, cache hits, host-path and chunked outputs are
+    never admitted. Kept per-run (not on the runtime) so concurrent
+    `run_plan` calls on one runtime cannot alias each other's
+    ownership."""
+
+    depth: int = 1
+    owned: set = field(default_factory=set)
 
 
 @dataclass
@@ -245,7 +331,17 @@ class LineageRuntime:
                  leaf_lineage: Optional[dict[int, str]] = None) -> list[np.ndarray]:
         values, lin = self._bind_leaves(plan, leaf_values, leaf_lineage)
         if self.fuse:
-            self._run_segments(plan, values, lin)
+            rctx = _RunCtx(depth=costmodel.pipeline_depth())
+            self._run_segments(plan, values, lin, rctx=rctx)
+            if rctx.depth >= 2:
+                # plan roots are THE sync point of the async pipeline:
+                # segment dispatches above returned without blocking,
+                # so the whole device backlog drains here, metered
+                t0 = time.perf_counter()
+                outs = [backend.to_numpy(values[i])
+                        for i in plan.output_ids]
+                self.stats.pipeline.block_s += time.perf_counter() - t0
+                return outs
         else:
             self._run_instructions(plan, values, lin)
         return [backend.to_numpy(values[i]) for i in plan.output_ids]
@@ -282,15 +378,30 @@ class LineageRuntime:
             uid: pad_batch(np.asarray(LEAVES.values[uid]), bplan.bucket)
             for uid in bplan.batched_leaf_uids}
         values, lin = self._bind_leaves(plan, leaf_values, None)
-        self._run_segments(plan, values, lin, bctx=bctx)
-        return self._unpack_batch(plan, values, bctx)
+        rctx = _RunCtx(depth=costmodel.pipeline_depth())
+        self._run_segments(plan, values, lin, bctx=bctx, rctx=rctx)
+        return self._unpack_batch(plan, values, bctx, rctx=rctx)
 
     # ------------------------------------------------------------------
-    @staticmethod
-    def _unpack_batch(plan: Plan, values: dict[int, Any],
-                      bctx: _BatchCtx) -> list[list[np.ndarray]]:
+    def _unpack_batch(self, plan: Plan, values: dict[int, Any],
+                      bctx: _BatchCtx,
+                      rctx: Optional[_RunCtx] = None
+                      ) -> list[list[np.ndarray]]:
         """Split a batched run's outputs into one list per config, in
-        order, with the bucket padding sliced off."""
+        order, with the bucket padding sliced off. At pipeline depth
+        >= 2 this is the batched path's sync point: the invariant
+        prefix and the vmapped variant suffix were all dispatched
+        without blocking, and the device backlog drains here."""
+        t0 = time.perf_counter() if rctx is not None \
+            and rctx.depth >= 2 else None
+        out = self._unpack_batch_sync(plan, values, bctx)
+        if t0 is not None:
+            self.stats.pipeline.block_s += time.perf_counter() - t0
+        return out
+
+    @staticmethod
+    def _unpack_batch_sync(plan: Plan, values: dict[int, Any],
+                           bctx: _BatchCtx) -> list[list[np.ndarray]]:
         k = bctx.batch
         per_config: list[list[np.ndarray]] = [[] for _ in range(k)]
         for uid in plan.output_ids:
@@ -339,8 +450,9 @@ class LineageRuntime:
                 uid: f"req:{_fingerprint(np.asarray(a))}"
                 for uid, a in zip(bplan.leaf_order, stacked)}
         values, lin = self._bind_leaves(plan, leaf_values, leaf_lineage)
-        self._run_segments(plan, values, lin, bctx=bctx)
-        return self._unpack_batch(plan, values, bctx)
+        rctx = _RunCtx(depth=costmodel.pipeline_depth())
+        self._run_segments(plan, values, lin, bctx=bctx, rctx=rctx)
+        return self._unpack_batch(plan, values, bctx, rctx=rctx)
 
     # ------------------------------------------------------------------
     def _bind_leaves(self, plan: Plan,
@@ -449,7 +561,8 @@ class LineageRuntime:
     # ------------------------------------------------------------------
     def _run_segments(self, plan: Plan, values: dict[int, Any],
                       lin: dict[int, str],
-                      bctx: Optional[_BatchCtx] = None) -> None:
+                      bctx: Optional[_BatchCtx] = None,
+                      rctx: Optional[_RunCtx] = None) -> None:
         """Segment executor: maximal fusable runs replayed through cached
         jit executables. With an active reuse cache, probe points are
         segment-final (see segments.py): the cache is probed before a
@@ -460,7 +573,17 @@ class LineageRuntime:
         variance-aware and config-variant segments execute as
         `jax.vmap`-wrapped executables over the padded batch axis —
         cached under a vmap-tagged key so they never collide with the
-        unbatched executable of the same segment body."""
+        unbatched executable of the same segment body.
+
+        At pipeline depth >= 2 (`_RunCtx.depth`) dispatches return
+        without a device sync (XLA computes asynchronously while the
+        host walks on to the next segment), and dead-after-segment
+        device buffers owned by this run are donated to XLA via
+        `donate_argnums` — the donation mask is baked into the jit-
+        cache key, so a donated executable can never serve a call whose
+        arguments must stay live."""
+        if rctx is None:
+            rctx = _RunCtx()
         reuse = self.cache is not None
         segments = (bctx.bplan.segments_for(reuse) if bctx is not None
                     else plan.segments_for(reuse))
@@ -494,7 +617,8 @@ class LineageRuntime:
                 # bucket and sum the partial aggregates — probes and
                 # cache puts happen inside (per output AND per chunk)
                 self._run_chunked_segment(plan, seg, seg_key, fmts,
-                                          values, lin, lmemo, jcache)
+                                          values, lin, lmemo, jcache,
+                                          rctx=rctx)
                 self._free(values, seg.frees)
                 continue
             if batched:
@@ -537,7 +661,7 @@ class LineageRuntime:
                             seg, seg_key, fmts, args, rest, last.out_id,
                             jcache, values,
                             bctx=bctx if batched else None,
-                            jmesh=jmesh)
+                            jmesh=jmesh, rctx=rctx)
                     self._free(values, seg.frees)
                     continue
             if last.node.op in backend.NON_TRACEABLE_OPS:
@@ -557,11 +681,30 @@ class LineageRuntime:
                 outs = (out,)
                 self.stats.executed += 1
             else:
+                # note: the REAL bctx, not the variant-gated one — in a
+                # batched (parfor/serving) plan even invariant-prefix
+                # segments must keep deterministic plain keys
+                don = self._donation_mask(seg, values, rctx, bctx)
+                if don:
+                    # donation changes executable semantics — bake the
+                    # mask into the structural key so the donated and
+                    # plain executables of one body never collide
+                    seg_key = (f"{seg_key}|don:"
+                               + ",".join(map(str, don)))
+                    plog = self.stats.pipeline
+                    plog.donated_buffers += len(don)
+                    plog.donated_bytes += sum(
+                        _reuse_nbytes(args[i]) for i in don)
                 outs = self._execute_cached(
                     seg_key, self._seg_builder(seg, fmts, bctx if batched
                                                else None, jmesh=jmesh),
-                    args, jcache)
+                    args, jcache, rctx=rctx, donate=don)
                 self.stats.executed += len(seg.instructions)
+                if rctx.depth >= 2 and not seg_sharded and not (
+                        batched and bctx.cshard > 1):
+                    # traced outputs this run produced and still owns —
+                    # donation candidates for their last consumer
+                    rctx.owned.update(seg.output_uids)
             for uid, val in zip(seg.output_uids, outs, strict=True):
                 values[uid] = val
             if lhash is not None:
@@ -569,6 +712,9 @@ class LineageRuntime:
                 # _run_instructions) — keeps eviction mode-identical
                 self.cache.put(lhash, values[last.out_id],
                                last.est_cost_s, gated=False)
+                # the reuse cache now references this buffer: it must
+                # never be donated out from under a future hit
+                rctx.owned.discard(last.out_id)
             self._free(values, seg.frees)
 
     # ------------------------------------------------------------------
@@ -619,20 +765,68 @@ class LineageRuntime:
                     ins.node)
 
     # ------------------------------------------------------------------
-    def _execute_cached(self, seg_key: str, build_fn, args, jcache):
+    @staticmethod
+    def _donation_mask(seg, values: dict[int, Any], rctx: _RunCtx,
+                       bctx: Optional[_BatchCtx]) -> tuple[int, ...]:
+        """Argument positions safe to donate on this dispatch.
+
+        Structural candidacy (`Segment.donatable_positions`: this
+        segment frees the uid, i.e. nothing in the plan reads it
+        afterwards) intersected with run-time ownership: the buffer
+        must have been produced by traced execution THIS run
+        (`_RunCtx.owned` — never a bound leaf, reuse-cache hit, or
+        value the cache took a reference to) and be a plain dense
+        array (BCOO pytrees and federated handles are never donated).
+        Sharded dispatches are excluded wholesale — their buffers live
+        on mesh-placed shardings XLA cannot alias into differently-
+        placed outputs. Batched (vmap/serving) dispatches are excluded
+        too: their donation mask would depend on per-request reuse-probe
+        outcomes, and a mask flip changes the executable key — a
+        retrace on a pinned serving hot path, which deploy warmup
+        guarantees never happens."""
+        if rctx.depth < 2 or bctx is not None \
+                or getattr(seg, "sharded", False):
+            return ()
+        cand = seg.donatable_positions()
+        if not cand:
+            return ()
+        return tuple(
+            i for i in cand
+            if seg.input_uids[i] in rctx.owned
+            and not backend.is_sparse(values[seg.input_uids[i]]))
+
+    # ------------------------------------------------------------------
+    def _execute_cached(self, seg_key: str, build_fn, args, jcache,
+                        rctx: Optional[_RunCtx] = None,
+                        donate: tuple = ()):
         """Run one executable through the jit cache (lookup, compile on
-        miss, execute, sync), accounting trace/exec time."""
+        miss, execute), accounting trace/exec time.
+
+        Pipeline depth 1 (or no `rctx`): block until every output is
+        ready — the pre-pipeline behaviour, bitwise and meter
+        identical. Depth >= 2: return the outputs as in-flight device
+        arrays (XLA dispatches asynchronously); the sync happens at
+        plan roots / probe materialization / host-op boundaries, and
+        the dispatch cost is metered into `stats.pipeline`."""
         key, exe = jcache.lookup(seg_key, args)
         if exe is None:
-            exe, dt_trace = jcache.compile(key, build_fn(), args)
+            exe, dt_trace = jcache.compile(key, build_fn(), args,
+                                           donate_argnums=donate)
             self.stats.trace_time += dt_trace
         else:
             self.stats.jit_cache_hits += 1
         t0 = time.perf_counter()
         outs = exe(*args)
-        for o in outs:
-            backend.block_ready(o)
-        self.stats.exec_time += time.perf_counter() - t0
+        if rctx is None or rctx.depth < 2:
+            for o in outs:
+                backend.block_ready(o)
+            self.stats.exec_time += time.perf_counter() - t0
+        else:
+            dt = time.perf_counter() - t0
+            self.stats.exec_time += dt
+            plog = self.stats.pipeline
+            plog.async_segments += 1
+            plog.dispatch_s += dt
         return outs
 
     # ------------------------------------------------------------------
@@ -640,15 +834,17 @@ class LineageRuntime:
                           rest: tuple, probe_uid: int, jcache,
                           values: dict[int, Any],
                           bctx: Optional[_BatchCtx] = None,
-                          jmesh=None) -> None:
+                          jmesh=None,
+                          rctx: Optional[_RunCtx] = None) -> None:
         """Execute a probe-hit segment's remaining outputs (the segment
         with the cached value dead-code eliminated); see
-        `segments.build_segment_fn(drop_output=...)`."""
+        `segments.build_segment_fn(drop_output=...)`. Never donates —
+        the compensation key derives from the plain segment key."""
         outs = self._execute_cached(
             f"{seg_key}|comp",
             self._seg_builder(seg, fmts, bctx, drop_output=probe_uid,
                               jmesh=jmesh),
-            args, jcache)
+            args, jcache, rctx=rctx)
         # interpreter-equivalent accounting: it would execute every
         # instruction except the one reused (DCE may drop more)
         self.stats.executed += len(seg.instructions) - 1
@@ -659,7 +855,8 @@ class LineageRuntime:
     def _run_chunked_segment(self, plan: Plan, seg, seg_key: str,
                              fmts: dict, values: dict[int, Any],
                              lin: dict[int, str], lmemo: dict[int, str],
-                             jcache) -> None:
+                             jcache,
+                             rctx: Optional[_RunCtx] = None) -> None:
         """Streaming executor for a chunked-target segment (out-of-core
         execution, ROADMAP item 4).
 
@@ -685,6 +882,18 @@ class LineageRuntime:
             (plus the replicated operands, which shift every bucket when
             they change). Appending or correcting rows recomputes ONLY
             the affected buckets; untouched ones hit.
+
+        At pipeline depth >= 2 (`costmodel.prefetch_depth`) the stream
+        is double-buffered: bucket fingerprints derive from the leaf's
+        block-sum table (`dag._slice_fingerprint` — bitwise identical
+        to hashing the slice, so the chunk cache is shared across
+        depths) and a bounded single-worker thread slices/pads the NEXT
+        miss bucket's arguments while the device computes the current
+        one. Cache lookups, meter updates and accumulation stay on the
+        main thread; the worker only does pure numpy prep. Worker
+        errors propagate to the caller via `Future.result()` and the
+        `finally` shutdown cancels queued preps so no thread outlives
+        the stream. Depth 1 takes the pre-pipeline loop verbatim.
         """
         reuse = self.cache is not None
         log = self.stats.streaming
@@ -790,42 +999,8 @@ class LineageRuntime:
             else:
                 modes[uid] = "keep"
         accs: dict[int, Any] = {u: None for u in seg.output_uids}
-        for s in range(0, rows, c):
-            e = min(s + c, rows)
-            parts, ckey, live = None, None, 0
-            if reuse:
-                fps = ",".join(_fingerprint(host[u][s:e])
-                               for u in sliced)
-                ckey = hashlib.sha1(
-                    f"chunkpart|{seg_key}|{s}:{e}|{rep_fp}|{fps}"
-                    .encode()).hexdigest()
-                parts = self.cache.probe(ckey)
-                if parts is not None:
-                    log.chunks_reused += 1
-            if parts is None:
-                args = []
-                for u in seg.input_uids:
-                    if u in host:
-                        a = host[u][s:e]
-                        if fmts.get(u) == backend.BCOO:
-                            a = backend.sparsify(a)
-                        live += _reuse_nbytes(a)
-                        args.append(a)
-                    else:
-                        args.append(values[u])
-                outs = self._execute_cached(seg_key, builder, args,
-                                            jcache)
-                # partials densify to HOST arrays: their only consumer
-                # is the `combine` densify boundary, numpy accumulators
-                # add chunk-by-chunk regardless of the slice's format,
-                # and host adds skip the per-op device dispatch that
-                # would otherwise dominate warm (all-chunks-reused) runs
-                parts = tuple(np.asarray(backend.densify(o))
-                              for o in outs)
-                log.chunks += 1
-                log.bytes_streamed += live
-                if ckey is not None:
-                    self.cache.put(ckey, parts, cost_each, gated=False)
+
+        def _accumulate(parts, live: int) -> None:
             for uid, p in zip(seg.output_uids, parts, strict=True):
                 prev = accs[uid]
                 mode = modes[uid]
@@ -841,6 +1016,57 @@ class LineageRuntime:
                             if v is not None)
             log.peak_live_bytes = max(log.peak_live_bytes,
                                       live + acc_bytes)
+
+        pdepth = 1
+        if rctx is not None and rctx.depth >= 2:
+            pdepth = costmodel.prefetch_depth(row_bytes, n_chunks)
+        if pdepth <= 1:
+            # ---- synchronous loop (pre-pipeline behaviour, bitwise
+            # and meter identical at REPRO_PIPELINE_DEPTH=1) ----
+            for s in range(0, rows, c):
+                e = min(s + c, rows)
+                parts, ckey, live = None, None, 0
+                if reuse:
+                    fps = ",".join(_fingerprint(host[u][s:e])
+                                   for u in sliced)
+                    ckey = hashlib.sha1(
+                        f"chunkpart|{seg_key}|{s}:{e}|{rep_fp}|{fps}"
+                        .encode()).hexdigest()
+                    parts = self.cache.probe(ckey)
+                    if parts is not None:
+                        log.chunks_reused += 1
+                if parts is None:
+                    args = []
+                    for u in seg.input_uids:
+                        if u in host:
+                            a = host[u][s:e]
+                            if fmts.get(u) == backend.BCOO:
+                                a = backend.sparsify(a)
+                            live += _reuse_nbytes(a)
+                            args.append(a)
+                        else:
+                            args.append(values[u])
+                    outs = self._execute_cached(seg_key, builder, args,
+                                                jcache)
+                    # partials densify to HOST arrays: their only
+                    # consumer is the `combine` densify boundary, numpy
+                    # accumulators add chunk-by-chunk regardless of the
+                    # slice's format, and host adds skip the per-op
+                    # device dispatch that would otherwise dominate
+                    # warm (all-chunks-reused) runs
+                    parts = tuple(np.asarray(backend.densify(o))
+                                  for o in outs)
+                    log.chunks += 1
+                    log.bytes_streamed += live
+                    if ckey is not None:
+                        self.cache.put(ckey, parts, cost_each,
+                                       gated=False)
+                _accumulate(parts, live)
+        else:
+            self._run_chunked_pipelined(
+                seg, seg_key, fmts, values, jcache, host, sliced,
+                rows, c, reuse, rep_fp, cost_each, builder,
+                _accumulate, row_bytes, rctx)
         for uid, m in modes.items():
             if m == "concat" and accs[uid] is not None:
                 accs[uid] = np.concatenate(accs[uid], axis=0)
@@ -858,6 +1084,135 @@ class LineageRuntime:
                                    out_ins[uid].est_cost_s, gated=False)
         self.stats.reused += len(hits)
         self.stats.executed += len(seg.instructions) - len(hits)
+
+    # ------------------------------------------------------------------
+    def _run_chunked_pipelined(self, seg, seg_key: str, fmts: dict,
+                               values: dict[int, Any], jcache,
+                               host: dict[int, np.ndarray],
+                               sliced: list, rows: int, c: int,
+                               reuse: bool, rep_fp: str,
+                               cost_each: float, builder,
+                               accumulate, row_bytes: float,
+                               rctx: _RunCtx) -> None:
+        """Double-buffered bucket loop (pipeline depth >= 2).
+
+        Division of labour, chosen so every shared structure stays
+        single-threaded: the MAIN thread resolves each bucket's
+        fingerprints (near-free via the leaf's block-sum table when the
+        bucket is 4096-byte aligned, direct hashing otherwise — both
+        bitwise identical to the synchronous loop's `_fingerprint`, so
+        chunk-cache keys and hits are depth-invariant), probes the
+        reuse cache, dispatches, accumulates and meters; the single
+        WORKER thread only slices/sparsifies a MISS bucket's arguments
+        (pure numpy on private data) while the device computes the
+        previous bucket. Hit buckets never reach the worker — a warm
+        append-retrain stream costs zero wasted copies.
+
+        `peak_live_bytes` charges the consuming bucket's actual bytes
+        PLUS the next in-flight miss bucket's estimated payload, so the
+        meter honestly reflects two live buckets under
+        `CHUNK_MEM_BUDGET` (chunk_rows sizes buckets with
+        `CHUNK_LIVE_FACTOR` headroom for exactly this).
+
+        A worker exception surfaces on the main thread at
+        `Future.result()`; the `finally` cancels queued preps (counted
+        as `prefetch_cancelled`) and joins the worker, so an error
+        never leaves a hung thread or a silently-dropped bucket."""
+        log = self.stats.streaming
+        plog = self.stats.pipeline
+        # block-sum tables are only valid when the bound value IS the
+        # registered leaf buffer (np.asarray of the registry array is
+        # identity); an override/densified copy falls back to hashing
+        tables = {}
+        for u in sliced:
+            a = host[u]
+            if (LEAVES.values.get(u) is a
+                    and a.flags["C_CONTIGUOUS"] and a.ndim >= 1):
+                tables[u] = LEAVES.fp_tables.get(u)
+            else:
+                tables[u] = None
+
+        def _bucket_fp(u: int, s: int, e: int) -> str:
+            sl = host[u][s:e]
+            t = tables[u]
+            if t is not None:
+                fp = _slice_fingerprint(sl, t, s * host[u].strides[0])
+                if fp is not None:
+                    return fp
+            return _fingerprint(sl)
+
+        def _prep(s: int, e: int):
+            t0 = time.perf_counter()
+            args, live = [], 0
+            for u in seg.input_uids:
+                if u in host:
+                    a = host[u][s:e]
+                    if fmts.get(u) == backend.BCOO:
+                        a = backend.sparsify(a)
+                    live += _reuse_nbytes(a)
+                    args.append(a)
+                else:
+                    args.append(values[u])
+            return args, live, time.perf_counter() - t0
+
+        spans = [(s, min(s + c, rows)) for s in range(0, rows, c)]
+        pdepth = costmodel.prefetch_depth(row_bytes, len(spans))
+        ex = ThreadPoolExecutor(max_workers=1,
+                                thread_name_prefix="chunk-prefetch")
+        inflight: deque = deque()  # (s, e, ckey, parts, fut)
+        nxt = 0
+        try:
+            while inflight or nxt < len(spans):
+                # keep pdepth buckets resolved/in-flight ahead of the
+                # consumer; fingerprint+probe on the main thread, args
+                # prep for misses on the worker
+                while len(inflight) < pdepth and nxt < len(spans):
+                    s, e = spans[nxt]
+                    nxt += 1
+                    ckey, parts, fut = None, None, None
+                    if reuse:
+                        fps = ",".join(_bucket_fp(u, s, e)
+                                       for u in sliced)
+                        ckey = hashlib.sha1(
+                            f"chunkpart|{seg_key}|{s}:{e}|{rep_fp}|{fps}"
+                            .encode()).hexdigest()
+                        parts = self.cache.probe(ckey)
+                        if parts is not None:
+                            log.chunks_reused += 1
+                    if parts is None:
+                        fut = ex.submit(_prep, s, e)
+                        plog.prefetch_issued += 1
+                    inflight.append((s, e, ckey, parts, fut))
+                s, e, ckey, parts, fut = inflight.popleft()
+                live = 0
+                if parts is None:
+                    args, live, dt_prep = fut.result()
+                    plog.prefetch_hits += 1
+                    plog.prefetch_s += dt_prep
+                    outs = self._execute_cached(seg_key, builder, args,
+                                                jcache, rctx=rctx)
+                    t0 = time.perf_counter()
+                    parts = tuple(np.asarray(backend.densify(o))
+                                  for o in outs)
+                    plog.block_s += time.perf_counter() - t0
+                    log.chunks += 1
+                    log.bytes_streamed += live
+                    if ckey is not None:
+                        self.cache.put(ckey, parts, cost_each,
+                                       gated=False)
+                # charge the NEXT in-flight miss bucket alongside this
+                # one: its args are (being) materialized concurrently
+                nxt_live = 0
+                if inflight and inflight[0][3] is None:
+                    n_rows = inflight[0][1] - inflight[0][0]
+                    nxt_live = int(n_rows * row_bytes)
+                accumulate(parts, live + nxt_live)
+        finally:
+            while inflight:
+                _, _, _, _, fut = inflight.popleft()
+                if fut is not None and fut.cancel():
+                    plog.prefetch_cancelled += 1
+            ex.shutdown(wait=True)
 
     # ------------------------------------------------------------------
     def _exec_one(self, ins, values: dict[int, Any], fmts: dict,

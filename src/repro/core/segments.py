@@ -93,6 +93,20 @@ class Segment:
     def fused(self) -> bool:
         return len(self.instructions) > 1
 
+    def donatable_positions(self) -> tuple[int, ...]:
+        """Argument positions that are donation *candidates*: inputs
+        whose uid this segment frees — i.e. it is their compile-time
+        last consumer, so after dispatch nothing in the plan can read
+        them again. The structural half of the `donate_argnums`
+        decision; the runtime intersects it with run-time ownership
+        (only buffers produced by traced execution this run and not
+        referenced by the reuse cache may actually be donated — see
+        `LineageRuntime._donation_mask`).
+        """
+        dead = set(self.frees)
+        return tuple(i for i, u in enumerate(self.input_uids)
+                     if u in dead)
+
 
 def _target_neutral(ins) -> bool:
     """Scalar generators (literals, folded constants) cost nothing on any

@@ -53,8 +53,13 @@ def generate(model, params, prompts: np.ndarray, *, max_new: int,
             tok = tok.reshape(tok.shape[0], 1, cfg.n_codebooks)
         else:
             tok = tok[:, None]
-        out_tokens.append(np.asarray(tok))
+        # issue the next decode step BEFORE materializing this token on
+        # the host: XLA dispatch is async, so the step-i+1 compute
+        # overlaps the step-i device->host copy instead of serializing
+        # behind it (the token-loop analogue of the runtime's pipelined
+        # dispatch; `tok` stays a device array through the decode call)
         logits, caches = decode(params, tok, caches, jnp.int32(cur + i))
+        out_tokens.append(np.asarray(tok))
     return np.concatenate(out_tokens, axis=1)
 
 

@@ -33,6 +33,20 @@ Architecture (one `ModelServer` per deployed `PreparedScript`):
              `RuntimeStats.serving.retraces` — the deploy contract is
              that this stays 0.
 
+Continuous rebatching (pipeline depth >= 2, see `core.costmodel
+.pipeline_depth`): the coalescer splits into an ISSUE stage (the
+coalescer thread itself — pops a batch, stacks its bindings) and a
+COMPLETION worker (a second thread that replays the batch and delivers
+futures), joined by a 1-deep handoff queue. While the worker blocks on
+the device for batch N, the coalescer is already admitting arrivals
+into batch N+1 and stacking it — so a sustained open-loop stream never
+serializes queue-drain behind device compute. Batches coalesced while
+another was in flight are counted in `RuntimeStats.pipeline.rebatches`.
+All runtime execution stays on the single completion worker; the
+coalescer touches only its own queue and pure-numpy stacking. At depth
+1 the dispatcher replays inline — the pre-pipeline behaviour,
+unchanged.
+
 Mesh-aware degradation: a script compiled under a device mesh keeps
 its sharded segment lowering; at replay the runtime swaps in the
 local-equivalent (unsharded) executable whenever the mesh cannot be
@@ -41,6 +55,7 @@ serving-specific handling.
 """
 from __future__ import annotations
 
+import queue as _queue
 import threading
 import time
 from collections import deque
@@ -49,7 +64,7 @@ from typing import Any, Optional, Sequence
 import numpy as np
 
 from repro.core import costmodel
-from repro.core.batching import bucket_size
+from repro.core.batching import bucket_size, stack_requests
 from repro.core.jit_cache import get_jit_cache
 from repro.core.runtime import LineageRuntime, PreparedScript
 
@@ -134,6 +149,13 @@ class ModelServer:
         self._thread: Optional[threading.Thread] = None
         self._deployed = False
         self._warm_misses = 0       # jit-cache miss watermark at deploy
+        # continuous rebatching (pipeline depth >= 2): issue/completion
+        # split — the coalescer hands stacked batches to a single
+        # completion worker through a 1-deep queue and keeps admitting
+        self._pipelined = False
+        self._inflight = 0          # batches issued, not yet delivered
+        self._pending: Optional[_queue.Queue] = None
+        self._worker: Optional[threading.Thread] = None
 
     # -- lifecycle -----------------------------------------------------
     def deploy(self) -> "ModelServer":
@@ -166,6 +188,13 @@ class ModelServer:
         self._pinned_keys = set(touched)
         self._warm_misses = jcache.stats.misses
         self._stop = False
+        self._pipelined = costmodel.pipeline_depth() >= 2
+        if self._pipelined:
+            self._pending = _queue.Queue(maxsize=1)
+            self._worker = threading.Thread(
+                target=self._complete_loop,
+                name="repro-serving-completer", daemon=True)
+            self._worker.start()
         self._thread = threading.Thread(
             target=self._coalesce_loop, name="repro-serving-coalescer",
             daemon=True)
@@ -185,6 +214,14 @@ class ModelServer:
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._worker is not None:
+            # the coalescer has drained and exited; a sentinel past any
+            # still-queued batch stops the completion worker after it
+            # delivers everything in flight — no dropped batches
+            self._pending.put(None)
+            self._worker.join()
+            self._worker = None
+            self._pending = None
         get_jit_cache().unpin_all(self._pinned_keys)
         self._pinned_keys = set()
         if self._bplan is not None:
@@ -249,7 +286,8 @@ class ModelServer:
             self._force = True
             self._cv.notify_all()
             self._cv.wait_for(
-                lambda: (not self._queue and not self._busy)
+                lambda: (not self._queue and not self._busy
+                         and not self._inflight)
                 or (self._stop and self._thread is None))
 
     # -- coalescer -----------------------------------------------------
@@ -297,15 +335,51 @@ class ModelServer:
                                             self.max_batch))]
                 if not self._queue:
                     self._force = False
-                self._busy = True
+                if self._pipelined:
+                    if self._inflight:
+                        # coalesced while the completion worker still
+                        # had a batch on the device: the continuous-
+                        # rebatching overlap actually happened
+                        self.runtime.stats.pipeline.rebatches += 1
+                    self._inflight += 1
+                else:
+                    self._busy = True
+            if self._pipelined:
+                # issue stage: stack batch N+1's bindings while the
+                # worker replays batch N (the put blocks only when a
+                # stacked batch is already waiting — at most one batch
+                # is ever staged ahead of the device)
+                stacked = stack_requests(
+                    [r.arrays for r in batch],
+                    len(self.script._arg_shapes))
+                self._pending.put((batch, stacked))
+            else:
+                try:
+                    self._dispatch(batch)
+                finally:
+                    with self._cv:
+                        self._busy = False
+                        self._cv.notify_all()
+
+    def _complete_loop(self) -> None:
+        """Completion worker (pipeline depth >= 2): replay staged
+        batches and deliver their futures. The ONLY thread that touches
+        the runtime — execution stays single-threaded under
+        rebatching."""
+        while True:
+            item = self._pending.get()
+            if item is None:
+                return
+            batch, stacked = item
             try:
-                self._dispatch(batch)
+                self._dispatch(batch, stacked)
             finally:
                 with self._cv:
-                    self._busy = False
+                    self._inflight -= 1
                     self._cv.notify_all()
 
-    def _dispatch(self, batch: list[ScoreFuture]) -> None:
+    def _dispatch(self, batch: list[ScoreFuture],
+                  stacked: Optional[list[np.ndarray]] = None) -> None:
         k = len(batch)
         if k == 0:
             return
@@ -313,8 +387,9 @@ class ModelServer:
         log = self.runtime.stats.serving
         t0 = time.monotonic()
         try:
-            stacked = [np.stack([r.arrays[i] for r in batch])
-                       for i in range(len(self.script._arg_shapes))]
+            if stacked is None:
+                stacked = [np.stack([r.arrays[i] for r in batch])
+                           for i in range(len(self.script._arg_shapes))]
             miss0 = jcache.stats.misses
             results = self.runtime.replay_batch(self._bplan, stacked, k)
             # the hot-path hygiene counter: any compile after deploy
@@ -333,6 +408,8 @@ class ModelServer:
                 if not req.done.is_set():
                     req.error = e
                     req.done.set()
+        finally:
+            log.busy_s += time.monotonic() - t0
 
     # -- introspection -------------------------------------------------
     def explain(self) -> str:

@@ -1,0 +1,398 @@
+"""Async pipelined dispatch (PR 9): depth parity, donation safety,
+prefetch error propagation, and continuous serving rebatching.
+
+The contract under test:
+
+  * `REPRO_PIPELINE_DEPTH=1` reproduces the synchronous runtime exactly
+    — same results bitwise, zero pipeline counters, no `pipeline`
+    section in `RuntimeStats.as_dict()`;
+  * depth 2 matches depth 1 numerically (bitwise for single-row
+    serving, 1e-10 for streamed lmDS/PCA) across fuse modes, and its
+    chunk-cache keys are bitwise-compatible with depth 1's (a cache
+    populated synchronously fully hits under the pipelined loop — the
+    table-derived slice fingerprints are exact, not approximate);
+  * buffer donation never claims a value the runtime doesn't own: leaf
+    bindings, reuse-cache entries and probe-hit values survive any
+    number of donating runs, and donated executables live under a
+    separate `|don:`-suffixed jit-cache key;
+  * a prefetch-worker error propagates to the caller and the worker is
+    joined — no hung threads, no silently dropped buckets; same for
+    the serving completion worker, where `QueueFullError` backpressure
+    keeps working while a batch is in flight.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import costmodel, ops, runtime as rt_mod
+from repro.core.dag import input_tensor
+from repro.core.jit_cache import get_jit_cache
+from repro.core.reuse import ReuseCache
+from repro.core.runtime import LineageRuntime, PreparedScript
+from repro.lifecycle.algorithms import pca
+from repro.lifecycle.regression import lmDS
+from repro.serving import ModelServer, QueueFullError
+
+BUDGET = 1 << 16
+
+
+def _lm_ref(Xh, yh, reg=1e-3):
+    return np.linalg.solve(Xh.T @ Xh + reg * np.eye(Xh.shape[1]),
+                           Xh.T @ yh)
+
+
+def _lm_run(rt, Xh, yh, reg=1e-3):
+    X = input_tensor("X", Xh)
+    y = input_tensor("y", yh)
+    return np.asarray(lmDS(X, y, reg=reg, runtime=rt)).ravel()
+
+
+def _no_prefetch_threads():
+    return not [t for t in threading.enumerate()
+                if t.name.startswith("chunk-prefetch") and t.is_alive()]
+
+
+# ---------------------------------------------------------------------------
+# depth-1 contract: the synchronous runtime, exactly
+# ---------------------------------------------------------------------------
+
+def test_depth1_has_no_pipeline_footprint(rng, monkeypatch):
+    monkeypatch.setenv("REPRO_PIPELINE_DEPTH", "1")
+    monkeypatch.setattr(costmodel, "CHUNK_MEM_BUDGET", BUDGET)
+    rt = LineageRuntime(cache=ReuseCache(), fuse=True)
+    Xh, yh = rng.normal(size=(4096, 8)), rng.normal(size=(4096,))
+    got = _lm_run(rt, Xh, yh)
+    assert np.abs(got - _lm_ref(Xh, yh).ravel()).max() < 1e-10
+    p = rt.stats.pipeline
+    assert p.total == 0
+    assert p.dispatch_s == p.block_s == p.prefetch_s == 0.0
+    assert "pipeline" not in rt.stats.as_dict()
+    assert rt.stats.streaming.chunks > 1  # the stream really ran
+
+
+def test_depth_parity_streamed_lmds_across_fuse_modes(rng, monkeypatch):
+    monkeypatch.setattr(costmodel, "CHUNK_MEM_BUDGET", BUDGET)
+    Xh, yh = rng.normal(size=(4096, 8)), rng.normal(size=(4096,))
+    got = {}
+    for depth in ("1", "2"):
+        monkeypatch.setenv("REPRO_PIPELINE_DEPTH", depth)
+        for fuse in (True, False):
+            rt = LineageRuntime(cache=ReuseCache(), fuse=fuse)
+            got[(depth, fuse)] = _lm_run(rt, Xh, yh)
+            if fuse and depth == "2":
+                assert rt.stats.pipeline.total > 0
+    ref = got[("1", True)]
+    for k, v in got.items():
+        assert np.abs(v - ref).max() < 1e-10, k
+    # fused runs are bitwise across depths: same executables, same
+    # accumulation order, only the sync points moved
+    assert np.array_equal(got[("1", True)], got[("2", True)])
+
+
+def test_depth_parity_streamed_pca(rng, monkeypatch):
+    monkeypatch.setattr(costmodel, "CHUNK_MEM_BUDGET", BUDGET)
+    Xh = rng.normal(size=(4096, 8))
+    comps = {}
+    for depth in ("1", "2"):
+        monkeypatch.setenv("REPRO_PIPELINE_DEPTH", depth)
+        rt = LineageRuntime(cache=ReuseCache(), fuse=True)
+        c, _ = pca(input_tensor("X", Xh), 3, runtime=rt)
+        comps[depth] = np.asarray(c)
+        assert rt.stats.streaming.chunks > 1
+    assert np.abs(comps["1"] - comps["2"]).max() < 1e-10
+
+
+# ---------------------------------------------------------------------------
+# chunk-cache key parity across depths (derived slice fingerprints)
+# ---------------------------------------------------------------------------
+
+def test_depth1_populated_chunk_cache_fully_hits_at_depth2(
+        rng, monkeypatch):
+    # 1 MiB budget over a 16 MiB matrix: bucket slices are > 64 KiB and
+    # 4096-byte aligned, so the depth-2 loop takes the table-derived
+    # fingerprint path — and must reproduce depth 1's sha1 keys bitwise
+    monkeypatch.setattr(costmodel, "CHUNK_MEM_BUDGET", 1 << 20)
+    Xh = rng.normal(size=(1 << 15, 64))
+    yh = rng.normal(size=(1 << 15,))
+    rt = LineageRuntime(cache=ReuseCache(), fuse=True)
+    monkeypatch.setenv("REPRO_PIPELINE_DEPTH", "1")
+    cold = _lm_run(rt, Xh, yh)
+    s = rt.stats.streaming
+    base_chunks, base_reused = s.chunks, s.chunks_reused
+    assert base_chunks > 1
+    # correction: one changed cell re-dispatches exactly one bucket at
+    # depth 2 — every untouched bucket's pipelined key HITS the
+    # synchronously-written cache entries
+    monkeypatch.setenv("REPRO_PIPELINE_DEPTH", "2")
+    Xc = Xh.copy()
+    Xc[777, 3] = 42.0
+    got = _lm_run(rt, Xc, yh)
+    assert np.abs(got - _lm_ref(Xc, yh).ravel()).max() < 1e-10
+    assert s.chunks - base_chunks == 1
+    assert s.chunks_reused - base_reused == base_chunks - 1
+    assert rt.stats.pipeline.prefetch_issued >= 1
+    assert np.isfinite(cold).all()
+
+
+def test_depth2_append_retrain_reuses_all_old_buckets(rng, monkeypatch):
+    monkeypatch.setattr(costmodel, "CHUNK_MEM_BUDGET", BUDGET)
+    monkeypatch.setenv("REPRO_PIPELINE_DEPTH", "2")
+    Xh, yh = rng.normal(size=(4096, 8)), rng.normal(size=(4096,))
+    rt = LineageRuntime(cache=ReuseCache(), fuse=True)
+    _lm_run(rt, Xh, yh)
+    s = rt.stats.streaming
+    base_chunks, base_reused = s.chunks, s.chunks_reused
+    extra = 409
+    Xa = np.vstack([Xh, rng.normal(size=(extra, 8))])
+    ya = np.concatenate([yh, rng.normal(size=(extra,))])
+    got = _lm_run(rt, Xa, ya)
+    assert np.abs(got - _lm_ref(Xa, ya).ravel()).max() < 1e-10
+    assert s.chunks_reused - base_reused == base_chunks
+    assert s.chunks - base_chunks <= extra // 16 + 1
+
+
+# ---------------------------------------------------------------------------
+# memory bound with prefetch live
+# ---------------------------------------------------------------------------
+
+def test_peak_live_bytes_under_budget_with_prefetch(rng, monkeypatch):
+    monkeypatch.setattr(costmodel, "CHUNK_MEM_BUDGET", BUDGET)
+    monkeypatch.setenv("REPRO_PIPELINE_DEPTH", "2")
+    Xh, yh = rng.normal(size=(4096, 8)), rng.normal(size=(4096,))
+    rt = LineageRuntime(cache=None, fuse=True)
+    _lm_run(rt, Xh, yh)
+    s = rt.stats.streaming
+    assert s.chunks > 1
+    assert rt.stats.pipeline.prefetch_issued > 1
+    # the meter charges BOTH in-flight buckets, and still fits: the
+    # bucket sizing keeps CHUNK_LIVE_FACTOR headroom per slice
+    assert 0 < s.peak_live_bytes <= BUDGET
+    assert _no_prefetch_threads()
+
+
+# ---------------------------------------------------------------------------
+# donation safety
+# ---------------------------------------------------------------------------
+
+def _donating_run(Xh, yh):
+    """One fused lmDS run on a FRESH reuse-cache runtime: probe points
+    split the plan into 4 segments, and the normal-equations combine
+    frees a non-probe intermediate across a boundary — the depth-2
+    executor donates it. Fresh cache per run keeps the probe outcomes
+    (and therefore the donation masks and jit keys) deterministic."""
+    rt = LineageRuntime(cache=ReuseCache(), fuse=True)
+    return _lm_run(rt, Xh, yh), rt
+
+
+def test_depth2_donates_and_keys_separate(rng, monkeypatch):
+    monkeypatch.setattr(costmodel, "CHUNK_MEM_BUDGET", 1 << 30)
+    Xh, yh = rng.normal(size=(2048, 16)), rng.normal(size=(2048,))
+    jstats = get_jit_cache().stats
+    monkeypatch.setenv("REPRO_PIPELINE_DEPTH", "1")
+    got1, rt1 = _donating_run(Xh, yh)
+    assert rt1.stats.pipeline.donated_buffers == 0
+    monkeypatch.setenv("REPRO_PIPELINE_DEPTH", "2")
+    miss0 = jstats.misses
+    got2, rt2 = _donating_run(Xh, yh)
+    p = rt2.stats.pipeline
+    assert p.donated_buffers > 0
+    assert p.donated_bytes > 0
+    assert p.async_segments > 0
+    # donated executables are NEW cache entries (the |don: key suffix):
+    # they can never shadow or be served by the plain depth-1 programs
+    assert jstats.misses > miss0
+    assert np.array_equal(got1, got2)
+    # replaying depth 2 on identical content: the donated executables
+    # hit their own keys — not a single extra compile
+    miss1 = jstats.misses
+    got3, _ = _donating_run(Xh, yh)
+    assert jstats.misses == miss1
+    assert np.array_equal(got2, got3)
+
+
+def test_donation_never_claims_reuse_cache_entries(rng, monkeypatch):
+    # probe values enter the reuse cache as live references; a donated
+    # buffer would be invalidated by the next dispatch and the warm-run
+    # hit would hand back a dead array. Three runs on one cache: the
+    # second hits the probes the first stored, the third proves the hit
+    # values were never donated out from under the cache.
+    monkeypatch.setattr(costmodel, "CHUNK_MEM_BUDGET", 1 << 30)
+    monkeypatch.setenv("REPRO_PIPELINE_DEPTH", "2")
+    Xh, yh = rng.normal(size=(2048, 16)), rng.normal(size=(2048,))
+    rt = LineageRuntime(cache=ReuseCache(), fuse=True)
+    a = _lm_run(rt, Xh, yh)
+    reused0 = rt.stats.reused
+    b = _lm_run(rt, Xh, yh)
+    assert rt.stats.reused > reused0  # warm run really hit the cache
+    c = _lm_run(rt, Xh, yh)
+    assert np.array_equal(a, b)
+    assert np.array_equal(b, c)
+
+
+def test_leaves_are_never_donated(rng, monkeypatch):
+    # the same leaf arrays serve four plans back-to-back; if a leaf
+    # buffer were ever donated, the later runs would read a deleted
+    # array (jax raises) or corrupt results
+    monkeypatch.setattr(costmodel, "CHUNK_MEM_BUDGET", 1 << 30)
+    monkeypatch.setenv("REPRO_PIPELINE_DEPTH", "2")
+    Xh, yh = rng.normal(size=(1024, 8)), rng.normal(size=(1024,))
+    runs = [_donating_run(Xh, yh)[0] for _ in range(4)]
+    for r in runs[1:]:
+        assert np.array_equal(runs[0], r)
+    assert np.isfinite(runs[0]).all()
+
+
+def test_batched_dispatches_never_donate(rng, monkeypatch):
+    monkeypatch.setenv("REPRO_PIPELINE_DEPTH", "2")
+    rt = LineageRuntime(cache=ReuseCache(), fuse=True)
+
+    def fn(X, y):
+        return ops.solve(X.T @ X + 1e-3 * ops.eye(4), X.T @ y)
+
+    Xh, yh = rng.normal(size=(256, 4)), rng.normal(size=(256,))
+    script = PreparedScript(fn, [Xh.shape, yh.shape], runtime=rt)
+    bplan = script.prepare_batched()
+    stacked = [np.stack([Xh, Xh * 2.0]), np.stack([yh, yh * 0.5])]
+    rt.replay_batch(bplan, stacked, 2)
+    assert rt.stats.pipeline.donated_buffers == 0
+    bplan.release_leaves()
+
+
+# ---------------------------------------------------------------------------
+# prefetch-worker error propagation
+# ---------------------------------------------------------------------------
+
+def test_prefetch_error_propagates_and_joins_worker(rng, monkeypatch):
+    monkeypatch.setattr(costmodel, "CHUNK_MEM_BUDGET", BUDGET)
+    monkeypatch.setenv("REPRO_PIPELINE_DEPTH", "2")
+    real = rt_mod._reuse_nbytes
+
+    def boom(a):
+        if threading.current_thread().name.startswith("chunk-prefetch"):
+            raise RuntimeError("prefetch boom")
+        return real(a)
+
+    monkeypatch.setattr(rt_mod, "_reuse_nbytes", boom)
+    Xh, yh = rng.normal(size=(4096, 8)), rng.normal(size=(4096,))
+    rt = LineageRuntime(cache=None, fuse=True)
+    with pytest.raises(RuntimeError, match="prefetch boom"):
+        _lm_run(rt, Xh, yh)
+    # clean shutdown: queued preps cancelled, worker joined
+    assert _no_prefetch_threads()
+    # and the runtime is not poisoned: the next run (healthy worker)
+    # streams to the correct answer
+    monkeypatch.setattr(rt_mod, "_reuse_nbytes", real)
+    got = _lm_run(rt, Xh, yh)
+    assert np.abs(got - _lm_ref(Xh, yh).ravel()).max() < 1e-10
+    assert _no_prefetch_threads()
+
+
+# ---------------------------------------------------------------------------
+# serving: continuous rebatching
+# ---------------------------------------------------------------------------
+
+def _score_script(rng):
+    rt = LineageRuntime(cache=None, fuse=True)
+
+    def fn(x):
+        return ops.matmul(x, x.T)
+
+    return PreparedScript(fn, [(4, 4)], runtime=rt), rt
+
+
+def test_serving_single_row_bitwise_parity_across_depths(
+        rng, monkeypatch):
+    x = rng.normal(size=(4, 4))
+    got = {}
+    for depth in ("1", "2"):
+        monkeypatch.setenv("REPRO_PIPELINE_DEPTH", depth)
+        script, _rt = _score_script(rng)
+        with ModelServer(script, max_batch=4, max_wait_us=200.0) as srv:
+            got[depth] = srv.score(x)[0]
+        assert np.allclose(got[depth], x @ x.T, atol=1e-12)
+    # the depth-2 issue/completion split replays the SAME executables:
+    # single-row results are bitwise identical to the inline dispatcher
+    assert np.array_equal(got["1"], got["2"])
+
+
+def test_serving_rebatching_overlaps_inflight_batches(rng, monkeypatch):
+    monkeypatch.setenv("REPRO_PIPELINE_DEPTH", "2")
+    script, rt = _score_script(rng)
+    srv = ModelServer(script, max_batch=2, max_wait_us=100.0,
+                      queue_limit=64)
+    with srv:
+        assert srv._pipelined
+        gate = threading.Event()
+        orig = rt.replay_batch
+
+        def slow(*a, **k):
+            gate.wait(5.0)
+            return orig(*a, **k)
+
+        monkeypatch.setattr(rt, "replay_batch", slow)
+        xs = [rng.normal(size=(4, 4)) for _ in range(6)]
+        futs = [srv.submit(x) for x in xs]
+        time.sleep(0.05)  # let the coalescer stage batches behind the gate
+        gate.set()
+        outs = [f.result(timeout=10.0) for f in futs]
+        srv.flush()
+    for x, out in zip(xs, outs):
+        assert np.allclose(out[0], x @ x.T, atol=1e-12)
+    assert rt.stats.pipeline.rebatches >= 1
+    assert rt.stats.serving.retraces == 0
+    assert rt.stats.serving.busy_s > 0.0
+
+
+def test_serving_error_delivery_and_queue_full_while_inflight(
+        rng, monkeypatch):
+    monkeypatch.setenv("REPRO_PIPELINE_DEPTH", "2")
+    script, rt = _score_script(rng)
+    srv = ModelServer(script, max_batch=1, max_wait_us=50.0,
+                      queue_limit=2)
+    with srv:
+        gate = threading.Event()
+        orig = rt.replay_batch
+        calls = []
+
+        def failing(*a, **k):
+            calls.append(1)
+            gate.wait(5.0)
+            if len(calls) == 1:
+                raise ValueError("replay boom")
+            return orig(*a, **k)
+
+        monkeypatch.setattr(rt, "replay_batch", failing)
+        x = rng.normal(size=(4, 4))
+        f1 = srv.submit(x)           # in flight, will fail
+        time.sleep(0.05)             # ensure it reached the worker
+        f2 = srv.submit(x)           # staged behind it
+        f3 = srv.submit(x)
+        # bounded queue still applies while a batch is in flight
+        with pytest.raises(QueueFullError):
+            for _ in range(8):
+                srv.submit(x)
+        gate.set()
+        with pytest.raises(ValueError, match="replay boom"):
+            f1.result(timeout=10.0)
+        # the failed batch didn't kill the pipeline: staged requests
+        # complete and match the direct product
+        for f in (f2, f3):
+            assert np.allclose(f.result(timeout=10.0)[0], x @ x.T,
+                               atol=1e-12)
+        assert rt.stats.serving.rejected >= 1
+    # shutdown joined both stages
+    assert not [t for t in threading.enumerate()
+                if t.name.startswith("repro-serving") and t.is_alive()]
+
+
+def test_serving_depth1_keeps_inline_dispatch(rng, monkeypatch):
+    monkeypatch.setenv("REPRO_PIPELINE_DEPTH", "1")
+    script, rt = _score_script(rng)
+    with ModelServer(script, max_batch=2, max_wait_us=50.0) as srv:
+        assert not srv._pipelined
+        assert srv._worker is None
+        x = rng.normal(size=(4, 4))
+        assert np.allclose(srv.score(x)[0], x @ x.T, atol=1e-12)
+    assert rt.stats.pipeline.rebatches == 0
