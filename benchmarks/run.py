@@ -40,6 +40,13 @@ Prints ``name,us_per_call,derived`` CSV lines.
                           rebatching) vs the depth-1 synchronous
                           executor, parity asserted at both lanes
                           (BENCH_pipeline.json)
+  faults_*              — ISSUE 10: fault-free overhead of the fault
+                          policy (asserted <= 2% vs
+                          REPRO_FAULT_POLICY=off) plus seeded chaos
+                          recovery — dead federated site, killed
+                          prefetch worker, serving shed + supervisor
+                          restart, parity asserted at 1e-12
+                          (BENCH_faults.json)
 
 Every run ends with a summary table aggregating the latest entry of all
 ``BENCH_*.json`` trajectories.
@@ -104,7 +111,9 @@ def aggregate() -> None:
                 or k.endswith("chunks") or k == "peak_live_bytes"
                 # async-pipeline columns (BENCH_pipeline)
                 or k == "overlap_ratio" or k == "rebatches"
-                or k == "donated_buffers")
+                or k == "donated_buffers"
+                # fault-tolerance columns (BENCH_faults)
+                or k == "incidents" or k.endswith("_overhead_pct"))
             rows.append((name,
                          str(entry.get("benchmark", "?")),
                          str(entry.get("workload", ""))[:46],
@@ -127,8 +136,9 @@ def aggregate() -> None:
 
 def main() -> None:
     if "--smoke" in sys.argv:
-        from benchmarks import (distributed_bench, federated_bench,
-                                fusion_bench, parfor_bench, pipeline_bench,
+        from benchmarks import (distributed_bench, faults_bench,
+                                federated_bench, fusion_bench,
+                                parfor_bench, pipeline_bench,
                                 serving_bench, sparse_bench,
                                 streaming_bench)
         print("name,us_per_call,derived")
@@ -147,12 +157,14 @@ def main() -> None:
         pipeline_bench.main(rows=16384, repeats=2, min_speedup=1.05,
                             d=64, rate=2600.0, openloop_n=300,
                             qps_floor=1200.0)
+        faults_bench.main(n_scores=100, rows=8192, repeats=5)
         aggregate()
         return
-    from benchmarks import (cv_reuse, distributed_bench, federated_bench,
-                            fusion_bench, hpo_baseline, hpo_reuse,
-                            kernel_bench, parfor_bench, pipeline_bench,
-                            roofline_bench, serving_bench, sparse_bench,
+    from benchmarks import (cv_reuse, distributed_bench, faults_bench,
+                            federated_bench, fusion_bench, hpo_baseline,
+                            hpo_reuse, kernel_bench, parfor_bench,
+                            pipeline_bench, roofline_bench,
+                            serving_bench, sparse_bench,
                             streaming_bench)
     quick = "--quick" in sys.argv
     ks = (1, 5, 10) if quick else (1, 5, 10, 20)
@@ -177,6 +189,8 @@ def main() -> None:
                         repeats=2 if quick else 3,
                         min_speedup=1.1 if quick else 1.15,
                         qps_floor=1800.0 if quick else 2105.0)
+    faults_bench.main(rows=16384 if quick else 32768,
+                      repeats=5 if quick else 8)
     aggregate()
 
 

@@ -556,6 +556,49 @@ def prefetch_depth(row_bytes: float, n_chunks: int) -> int:
     return min(2, n_chunks)
 
 
+# ---------------------------------------------------------------------------
+# Fault policy (ISSUE 10): per-site timeouts + bounded exponential
+# backoff, consumed by the runtime's federated/IO recovery ladders
+# ---------------------------------------------------------------------------
+
+# Per-site RPC timeout. Generous by default — a first call includes the
+# per-site jit compile, and a clean run must never trip the ladder; the
+# chaos tests force it down via env to exercise the timeout path
+# against injected stragglers. In-process sites cannot be preempted, so
+# the timeout binds at the attempt boundary: a late result is
+# discarded, counted, and the call retried.
+FED_TIMEOUT_S = 30.0
+
+# Exponential-backoff base: sleep RETRY_BASE_S * 2^(attempt-1) before
+# re-attempt k. Small — the local transport has no congestion to yield
+# to; real deployments raise it via env.
+RETRY_BASE_S = 0.01
+
+# Bounded retries per site call / IO read (re-attempts after the first
+# try). Exhaustion hands over to the degradation ladder.
+MAX_RETRIES = 2
+
+
+def fed_timeout_s() -> float:
+    """Per-site RPC timeout (env ``REPRO_FED_TIMEOUT_S``), read per
+    call like the pipeline knobs so one process can compare policies."""
+    return float(os.environ.get("REPRO_FED_TIMEOUT_S", FED_TIMEOUT_S))
+
+
+def retry_base_s() -> float:
+    return float(os.environ.get("REPRO_RETRY_BASE_S", RETRY_BASE_S))
+
+
+def max_retries() -> int:
+    return int(os.environ.get("REPRO_MAX_RETRIES", MAX_RETRIES))
+
+
+def retry_backoff_s(attempt: int) -> float:
+    """Backoff before re-attempt `attempt` (1-based): exponential in
+    the attempt number, bounded by the caller's `max_retries` loop."""
+    return retry_base_s() * (2.0 ** max(attempt - 1, 0))
+
+
 def should_chunk(n: Node) -> bool:
     """True when a leaf is worth streaming: a 2-D row-partitioned local
     leaf whose (format-aware) payload exceeds the memory budget."""

@@ -107,7 +107,8 @@ class LocalSite:
     data: Any  # np.ndarray or device array; rows × ncols partition
 
     def execute(self, op: str, args: tuple, attrs: tuple = (), stats=None,
-                vmap_axes: Optional[tuple] = None):
+                vmap_axes: Optional[tuple] = None,
+                site: Optional[int] = None):
         """Run one op over this site's data as a compiled segment.
 
         `args` is the *full* kernel argument tuple (the caller places
@@ -124,10 +125,18 @@ class LocalSite:
         in_axes) — the site runs its local work for the WHOLE grid in
         one compiled dispatch, so a k-configuration grid still touches
         the site once per federated instruction.
+
+        `site` is this site's index in the owning `FederatedTensor` —
+        the identity the seeded fault registry keys on. `site=None`
+        marks a master-side execution (the degradation ladder's
+        collect-and-recompute), which is never injected: recovery runs
+        the SAME cached executable on the surviving data, so a degraded
+        run is bitwise the clean run.
         """
         import jax
 
-        from . import backend
+        from . import backend, faults
+        faults.site_entry(site, op)
         from .jit_cache import get_jit_cache
         cache = get_jit_cache()
         seg_key = f"fedsite|{op}|{attrs!r}"

@@ -31,6 +31,8 @@ from typing import Any, Callable, Optional
 
 import jax
 
+from . import faults
+
 try:
     from jax.experimental.sparse import BCOO as _BCOO
 except Exception:  # pragma: no cover
@@ -167,6 +169,10 @@ class JitProgramCache:
         `_free`-uid candidates). Donation is baked into the caller's
         `key` (a `|don:` seg-key suffix), so a donated executable can
         never be replayed with live arguments under the plain key."""
+        # seeded fault injection (ISSUE 10): a `compile` rule fails this
+        # call before any tracing happens — callers degrade to the
+        # interpreter (segments) or retry (site sub-segments)
+        faults.compile_entry(key[0] if isinstance(key, tuple) else key)
         t0 = time.perf_counter()
         jitted = jax.jit(fn, donate_argnums=donate_argnums) \
             if donate_argnums else jax.jit(fn)

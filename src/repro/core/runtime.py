@@ -28,11 +28,12 @@ from typing import Any, Callable, Optional, Sequence
 
 import numpy as np
 
-from . import backend, costmodel
+from . import backend, costmodel, faults
 from .compiler import Plan, compile_plan
 from .dag import (LEAVES, LTensor, Node, _fingerprint, _lhash_rec,
                   _slice_fingerprint,
                   input_tensor)  # _fingerprint: PreparedScript lineage
+from .faults import CompileFailedError, FaultLog, SiteFailedError
 from .federated import ExchangeLog, FederatedTensor, LocalSite
 from .jit_cache import get_jit_cache
 from .reuse import ReuseCache
@@ -221,6 +222,11 @@ class RuntimeStats:
     # async-dispatch meter (deferred sync / donation / prefetch /
     # rebatching), populated only at pipeline depth >= 2
     pipeline: PipelineLog = field(default_factory=PipelineLog)
+    # fault-policy meter (see repro.core.faults): injections observed,
+    # retries/timeouts/backoff taken, degradation-ladder steps, serving
+    # sheds — plus per-site / per-dispatch latency monitors and site
+    # heartbeats (the rescued repro.distributed.fault control plane)
+    faults: FaultLog = field(default_factory=FaultLog)
 
     def as_dict(self):
         out = dict(instructions=self.instructions, executed=self.executed,
@@ -239,6 +245,8 @@ class RuntimeStats:
             out["streaming"] = self.streaming.as_dict()
         if self.pipeline.total:
             out["pipeline"] = self.pipeline.as_dict()
+        if self.faults.total:
+            out["faults"] = self.faults.as_dict()
         # the process-wide compiled-executable cache: hit/miss/eviction
         # counters + resident bytes, surfaced here so long-running
         # sessions can watch cache pressure alongside runtime counters
@@ -695,16 +703,31 @@ class LineageRuntime:
                     plog.donated_buffers += len(don)
                     plog.donated_bytes += sum(
                         _reuse_nbytes(args[i]) for i in don)
-                outs = self._execute_cached(
-                    seg_key, self._seg_builder(seg, fmts, bctx if batched
-                                               else None, jmesh=jmesh),
-                    args, jcache, rctx=rctx, donate=don)
+                try:
+                    outs = self._execute_cached(
+                        seg_key, self._seg_builder(seg, fmts,
+                                                   bctx if batched
+                                                   else None,
+                                                   jmesh=jmesh),
+                        args, jcache, rctx=rctx, donate=don)
+                except CompileFailedError as e:
+                    # degradation ladder: a segment whose jit compile
+                    # failed runs its instructions eagerly through the
+                    # fuse=False kernels (parity by construction);
+                    # vmapped/sharded segments have no eager equivalent
+                    # of the same executable and re-raise
+                    e.args = (f"{e.args[0]} [{seg.summary()}]",)
+                    if batched or seg_sharded:
+                        raise
+                    outs = self._interpret_segment(seg, values, fmts, e)
+                else:
+                    if rctx.depth >= 2 and not seg_sharded and not (
+                            batched and bctx.cshard > 1):
+                        # traced outputs this run produced and still
+                        # owns — donation candidates for their last
+                        # consumer
+                        rctx.owned.update(seg.output_uids)
                 self.stats.executed += len(seg.instructions)
-                if rctx.depth >= 2 and not seg_sharded and not (
-                        batched and bctx.cshard > 1):
-                    # traced outputs this run produced and still owns —
-                    # donation candidates for their last consumer
-                    rctx.owned.update(seg.output_uids)
             for uid, val in zip(seg.output_uids, outs, strict=True):
                 values[uid] = val
             if lhash is not None:
@@ -810,8 +833,16 @@ class LineageRuntime:
         the dispatch cost is metered into `stats.pipeline`."""
         key, exe = jcache.lookup(seg_key, args)
         if exe is None:
-            exe, dt_trace = jcache.compile(key, build_fn(), args,
-                                           donate_argnums=donate)
+            try:
+                exe, dt_trace = jcache.compile(key, build_fn(), args,
+                                               donate_argnums=donate)
+            except Exception as e:
+                # typed so the segment loop can take its degradation
+                # ladder (interpreter fallback); with the policy off
+                # compile errors propagate raw, as before
+                if faults.policy_enabled():
+                    raise CompileFailedError(seg_key, e) from e
+                raise
             self.stats.trace_time += dt_trace
         else:
             self.stats.jit_cache_hits += 1
@@ -840,16 +871,44 @@ class LineageRuntime:
         with the cached value dead-code eliminated); see
         `segments.build_segment_fn(drop_output=...)`. Never donates —
         the compensation key derives from the plain segment key."""
-        outs = self._execute_cached(
-            f"{seg_key}|comp",
-            self._seg_builder(seg, fmts, bctx, drop_output=probe_uid,
-                              jmesh=jmesh),
-            args, jcache, rctx=rctx)
+        try:
+            outs = self._execute_cached(
+                f"{seg_key}|comp",
+                self._seg_builder(seg, fmts, bctx, drop_output=probe_uid,
+                                  jmesh=jmesh),
+                args, jcache, rctx=rctx)
+        except CompileFailedError as e:
+            e.args = (f"{e.args[0]} [{seg.summary()}]",)
+            if bctx is not None or getattr(seg, "sharded", False):
+                raise
+            # eager fallback computes ALL segment outputs; deliver only
+            # the non-probe ones (the hit already filled probe_uid)
+            allouts = self._interpret_segment(seg, values, fmts, e)
+            by_uid = dict(zip(seg.output_uids, allouts, strict=True))
+            outs = tuple(by_uid[u] for u in rest)
         # interpreter-equivalent accounting: it would execute every
         # instruction except the one reused (DCE may drop more)
         self.stats.executed += len(seg.instructions) - 1
         for uid, val in zip(rest, outs, strict=True):
             values[uid] = val
+
+    # ------------------------------------------------------------------
+    def _interpret_segment(self, seg, values: dict[int, Any],
+                           fmts: dict, err: CompileFailedError) -> tuple:
+        """Graceful-degradation lane for a failed segment compile: run
+        the segment's instructions eagerly through `_exec_one` — the
+        SAME kernels the fuse=False interpreter dispatches, so the
+        degraded result matches the fused executable to numerical
+        round-off. Intermediates live in a private overlay; only the
+        segment's declared outputs are returned."""
+        flog = self.stats.faults
+        flog.degradations += 1
+        if isinstance(err.cause, faults.InjectedFault):
+            flog.injected += 1
+        env = dict(values)  # shallow overlay: refs only
+        for ins in seg.instructions:
+            env[ins.out_id] = self._exec_one(ins, env, fmts)
+        return tuple(env[u] for u in seg.output_uids)
 
     # ------------------------------------------------------------------
     def _run_chunked_segment(self, plan: Plan, seg, seg_key: str,
@@ -1115,9 +1174,13 @@ class LineageRuntime:
         `CHUNK_LIVE_FACTOR` headroom for exactly this).
 
         A worker exception surfaces on the main thread at
-        `Future.result()`; the `finally` cancels queued preps (counted
-        as `prefetch_cancelled`) and joins the worker, so an error
-        never leaves a hung thread or a silently-dropped bucket."""
+        `Future.result()`; under the fault policy the stream degrades
+        mid-flight to the synchronous chunk loop (injected or real
+        worker death costs the pipeline, never the answer), with the
+        policy off it propagates raw. Either way the `finally` cancels
+        queued preps (counted as `prefetch_cancelled`) and joins the
+        worker, so an error never leaves a hung thread or a
+        silently-dropped bucket."""
         log = self.stats.streaming
         plog = self.stats.pipeline
         # block-sum tables are only valid when the bound value IS the
@@ -1141,7 +1204,14 @@ class LineageRuntime:
                     return fp
             return _fingerprint(sl)
 
-        def _prep(s: int, e: int):
+        def _prep(s: int, e: int, probe_faults: bool = True):
+            if probe_faults:
+                # worker-side injection point: a chunk_io firing here
+                # kills this prep — the consumer degrades the rest of
+                # the stream to the synchronous loop. The degraded
+                # (probe_faults=False) re-preps are injection-free so
+                # recovery always completes.
+                faults.io_entry("chunk_prefetch")
             t0 = time.perf_counter()
             args, live = [], 0
             for u in seg.input_uids:
@@ -1186,7 +1256,60 @@ class LineageRuntime:
                 s, e, ckey, parts, fut = inflight.popleft()
                 live = 0
                 if parts is None:
-                    args, live, dt_prep = fut.result()
+                    try:
+                        args, live, dt_prep = fut.result()
+                    except Exception as err:
+                        if not faults.policy_enabled():
+                            raise
+                        # degradation ladder: the prefetch worker died
+                        # mid-stream — reclaim this span plus every
+                        # queued/unscheduled one and finish on the
+                        # synchronous loop (the `finally` still joins
+                        # the pool; the sync re-preps are
+                        # injection-free, so recovery terminates)
+                        flog = self.stats.faults
+                        if isinstance(err, faults.InjectedFault):
+                            flog.injected += 1
+                        flog.degradations += 1
+                        tail = [(s, e, ckey, None)]
+                        while inflight:
+                            s2, e2, ck2, p2, f2 = inflight.popleft()
+                            if f2 is not None and f2.cancel():
+                                plog.prefetch_cancelled += 1
+                            tail.append((s2, e2, ck2, p2))
+                        tail.extend((s3, e3, None, None)
+                                    for s3, e3 in spans[nxt:])
+                        nxt = len(spans)
+                        for s2, e2, ck2, p2 in tail:
+                            live2 = 0
+                            if p2 is None and reuse and ck2 is None:
+                                # spans the pipeline never resolved:
+                                # probe the chunk cache like the sync
+                                # loop would (same keys, same hits)
+                                fps = ",".join(_bucket_fp(u, s2, e2)
+                                               for u in sliced)
+                                ck2 = hashlib.sha1(
+                                    f"chunkpart|{seg_key}|{s2}:{e2}|"
+                                    f"{rep_fp}|{fps}"
+                                    .encode()).hexdigest()
+                                p2 = self.cache.probe(ck2)
+                                if p2 is not None:
+                                    log.chunks_reused += 1
+                            if p2 is None:
+                                args2, live2, _ = _prep(
+                                    s2, e2, probe_faults=False)
+                                outs2 = self._execute_cached(
+                                    seg_key, builder, args2, jcache)
+                                p2 = tuple(
+                                    np.asarray(backend.densify(o))
+                                    for o in outs2)
+                                log.chunks += 1
+                                log.bytes_streamed += live2
+                                if ck2 is not None:
+                                    self.cache.put(ck2, p2, cost_each,
+                                                   gated=False)
+                            accumulate(p2, live2)
+                        return
                     plog.prefetch_hits += 1
                     plog.prefetch_s += dt_prep
                     outs = self._execute_cached(seg_key, builder, args,
@@ -1260,6 +1383,83 @@ class LineageRuntime:
         return out
 
     # ------------------------------------------------------------------
+    def _site_call(self, op: str, i: int, rpc, local=None):
+        """One federated site RPC under the fault policy: per-site
+        timeout + bounded exponential-backoff retry, then the
+        degradation ladder. Returns ``(result, degraded)``.
+
+        `rpc(stats)` performs the site call (stats is `self.stats` on
+        the first attempt, None on re-attempts so retries cannot
+        double-book jit-cache/trace meters); `local()` is the
+        collect-and-recompute fallback run when every attempt failed
+        but the site's DATA survives. In-process sites cannot be
+        preempted, so the timeout binds at the attempt boundary: a
+        call slower than `costmodel.fed_timeout_s()` has its (late)
+        result discarded and is retried — sound because site kernels
+        are pure, a recompute yields the same value. Latencies route
+        through the `StepMonitor` straggler flagging and successful
+        calls heartbeat the site. With the policy off this is a bare
+        passthrough (raw error propagation)."""
+        if not faults.policy_enabled():
+            return rpc(self.stats), False
+        flog = self.stats.faults
+        timeout = costmodel.fed_timeout_s()
+        last_err: Optional[BaseException] = None
+        for attempt in range(costmodel.max_retries() + 1):
+            if attempt:
+                pause = costmodel.retry_backoff_s(attempt)
+                flog.retries += 1
+                flog.backoff_s += pause
+                if pause > 0:
+                    time.sleep(pause)
+            t0 = time.perf_counter()
+            try:
+                out = rpc(self.stats if attempt == 0 else None)
+            except Exception as e:
+                flog.record_site(i, time.perf_counter() - t0, ok=False)
+                if isinstance(e, faults.InjectedFault):
+                    flog.injected += 1
+                last_err = e
+                continue
+            dt = time.perf_counter() - t0
+            flog.record_site(i, dt)
+            if dt > timeout:
+                flog.timeouts += 1
+                last_err = TimeoutError(
+                    f"site {i} exceeded {timeout}s during {op!r}")
+                continue
+            return out, False
+        plan = faults.active_plan()
+        if local is None or (plan is not None and plan.data_lost(i)):
+            raise SiteFailedError(i, op, detail=str(last_err))
+        flog.degradations += 1
+        return local(), True
+
+    def _recompute_local(self, s, i: int, op: str, args: tuple,
+                         attrs: tuple, vmap_axes):
+        """Degradation-ladder step for a dead site whose data survives:
+        pull the partition to the master — metered as a collect
+        (`add_in` + one round) — and run the site's work locally
+        through the SAME jit-cached executable (`site=None` is never
+        injected), so a degraded run is bitwise the clean run."""
+        log = self.stats.exchange
+        log.add_in(s.data, site=i)
+        log.add_round(i)
+        return s.execute(op, args, attrs=attrs, stats=self.stats,
+                         vmap_axes=vmap_axes, site=None)
+
+    @staticmethod
+    def _data_plane_check(op: str, i: int) -> None:
+        """Raise `SiteFailedError` when site `i`'s data plane is gone
+        (`site_lost`) — guards pure data movement (collect) and the
+        recompute ladder, which both read `site.data` directly."""
+        if not faults.policy_enabled():
+            return
+        plan = faults.active_plan()
+        if plan is not None and plan.data_lost(i):
+            raise SiteFailedError(i, op)
+
+    # ------------------------------------------------------------------
     def _exec_federated(self, ins, values: dict[int, Any],
                         bctx: Optional[_BatchCtx] = None):
         """Execute one federated instruction (or a `collect` boundary).
@@ -1293,6 +1493,9 @@ class LineageRuntime:
             batched = getattr(fed, "batch", None) is not None
             parts = []
             for i, s in enumerate(fed.sites):
+                # collect is pure data movement: only a lost DATA plane
+                # can fail it (a dead compute plane still serves reads)
+                self._data_plane_check(op, i)
                 log.add_in(s.data, site=i)
                 log.add_round(i)
                 parts.append(np.asarray(s.data))
@@ -1307,10 +1510,16 @@ class LineageRuntime:
             vmap_axes = (0,) if batched else None
             out = None
             for i, s in enumerate(fed.sites):
-                g = s.execute("gram", (s.data,), stats=self.stats,
-                              vmap_axes=vmap_axes)
-                log.add_in(g, site=i)
-                log.add_round(i)
+                g, deg = self._site_call(
+                    op, i,
+                    lambda st, s=s, i=i: s.execute(
+                        "gram", (s.data,), stats=st,
+                        vmap_axes=vmap_axes, site=i),
+                    local=lambda s=s, i=i: self._recompute_local(
+                        s, i, "gram", (s.data,), (), vmap_axes))
+                if not deg:  # exchange metered on success only
+                    log.add_in(g, site=i)
+                    log.add_round(i)
                 out = g if out is None else out + g
             return _pad_axis0(out, bctx.bucket) if batched else out
 
@@ -1343,19 +1552,28 @@ class LineageRuntime:
                          if bat else None)
             out = None
             for i, (a, b) in enumerate(fed.ranges):
-                site_args = []
+                site_args, sent = [], []
                 for pos, v in enumerate(args):
                     if pos in fed_pos:
                         site_args.append(v.sites[i].data)
                     else:
                         sl = v[:, a:b] if pos in bat else v[a:b]
-                        log.add_out(sl, site=i)
+                        sent.append(sl)
                         site_args.append(sl)
-                r = fed.sites[i].execute("xtv", tuple(site_args),
-                                         stats=self.stats,
-                                         vmap_axes=vmap_axes)
-                log.add_in(r, site=i)
-                log.add_round(i)
+                s = fed.sites[i]
+                sa = tuple(site_args)
+                r, deg = self._site_call(
+                    op, i,
+                    lambda st, s=s, i=i, sa=sa: s.execute(
+                        "xtv", sa, stats=st,
+                        vmap_axes=vmap_axes, site=i),
+                    local=lambda s=s, i=i, sa=sa: self._recompute_local(
+                        s, i, "xtv", sa, (), vmap_axes))
+                if not deg:  # exchange metered on success only
+                    for sl in sent:
+                        log.add_out(sl, site=i)
+                    log.add_in(r, site=i)
+                    log.add_round(i)
                 out = r if out is None else out + r
             return _pad_axis0(out, bctx.bucket) if bat else out
 
@@ -1372,11 +1590,17 @@ class LineageRuntime:
                          if batched else None)
             parts = []
             for i, s in enumerate(fed.sites):
-                log.add_out(w, site=i)  # broadcast (whole grid at once)
-                r = s.execute("matmul", (s.data, w), stats=self.stats,
-                              vmap_axes=vmap_axes)
-                log.add_in(r, site=i)   # rbind of per-site results
-                log.add_round(i)
+                r, deg = self._site_call(
+                    op, i,
+                    lambda st, s=s, i=i: s.execute(
+                        "matmul", (s.data, w), stats=st,
+                        vmap_axes=vmap_axes, site=i),
+                    local=lambda s=s, i=i: self._recompute_local(
+                        s, i, "matmul", (s.data, w), (), vmap_axes))
+                if not deg:
+                    log.add_out(w, site=i)  # broadcast (whole grid)
+                    log.add_in(r, site=i)   # rbind of per-site results
+                    log.add_round(i)
                 parts.append(np.asarray(r))
             # per-site results are (rows_i, n) — or (k, rows_i, n)
             # batched — so the row concat axis shifts with the batch
@@ -1390,10 +1614,16 @@ class LineageRuntime:
             vmap_axes = (0,) if batched else None
             out = None
             for i, s in enumerate(fed.sites):
-                r = s.execute("colSums", (s.data,), stats=self.stats,
-                              vmap_axes=vmap_axes)
-                log.add_in(r, site=i)
-                log.add_round(i)
+                r, deg = self._site_call(
+                    op, i,
+                    lambda st, s=s, i=i: s.execute(
+                        "colSums", (s.data,), stats=st,
+                        vmap_axes=vmap_axes, site=i),
+                    local=lambda s=s, i=i: self._recompute_local(
+                        s, i, "colSums", (s.data,), (), vmap_axes))
+                if not deg:
+                    log.add_in(r, site=i)
+                    log.add_round(i)
                 out = r if out is None else out + r
             return _pad_axis0(out, bctx.bucket) if batched else out
 
@@ -1453,14 +1683,13 @@ class LineageRuntime:
         new_sites = []
         for i, (a, b) in enumerate(fed.ranges):
             rows_i = b - a
-            sent = False
             ia = dict(iattrs)
             if inner == "slice":
                 # rebase the absolute row range onto this site's rows
                 idx = list(ia["index"])
                 idx[0] = (0, rows_i, 0)
                 ia["index"] = tuple(idx)
-            site_args = []
+            site_args, to_send = [], []
             for pos in range(n_args):
                 if pos in gens:
                     val, k, dt = gens[pos]
@@ -1476,21 +1705,29 @@ class LineageRuntime:
                     ishp = shp[1:] if pos in bslots else shp
                     if ishp == () or ishp[0] == 1:
                         if ishp != () or pos in bslots:
-                            log.add_out(v, site=i)  # broadcast payload
-                            sent = True
+                            to_send.append(v)  # broadcast payload
                         site_args.append(v)
                     else:
                         sl = (v[:, a:b] if pos in bslots else v[a:b])
-                        log.add_out(sl, site=i)
-                        sent = True
+                        to_send.append(sl)
                         site_args.append(sl)
-            if sent:
+            s = fed.sites[i]
+            sa, attrs = tuple(site_args), tuple(sorted(ia.items()))
+            out_i, deg = self._site_call(
+                "fed_map", i,
+                lambda st, s=s, i=i, sa=sa, attrs=attrs: s.execute(
+                    inner, sa, attrs=attrs, stats=st,
+                    vmap_axes=vmap_axes, site=i),
+                local=lambda s=s, i=i, sa=sa, attrs=attrs:
+                    self._recompute_local(s, i, inner, sa, attrs,
+                                          vmap_axes))
+            if not deg and to_send:
                 # purely on-site fed_map work (generators, fed
-                # operands) exchanges nothing and counts no round
+                # operands) exchanges nothing and counts no round;
+                # exchange is metered on success only
+                for payload in to_send:
+                    log.add_out(payload, site=i)
                 log.add_round(i)
-            out_i = fed.sites[i].execute(
-                inner, tuple(site_args), attrs=tuple(sorted(ia.items())),
-                stats=self.stats, vmap_axes=vmap_axes)
             new_sites.append(LocalSite(out_i))
         return FederatedTensor(sites=new_sites, ranges=list(fed.ranges),
                                ncols=node.shape[1],

@@ -107,6 +107,18 @@ class Segment:
         return tuple(i for i, u in enumerate(self.input_uids)
                      if u in dead)
 
+    def summary(self) -> str:
+        """One-line human identity of this segment — used by the fault
+        policy's degradation warnings and `CompileFailedError` context,
+        where the structural hash alone tells an operator nothing."""
+        ops = [ins.node.op for ins in self.instructions]
+        shown = ",".join(ops[:6]) + (",…" if len(ops) > 6 else "")
+        lanes = "".join(tag for flag, tag in
+                        ((self.variant, "+vmap"), (self.sharded, "+shard"),
+                         (self.chunked, "+chunk")) if flag)
+        return (f"segment#{self.index}[{self.target}{lanes}] "
+                f"ops={shown} ins={len(self.instructions)}")
+
 
 def _target_neutral(ins) -> bool:
     """Scalar generators (literals, folded constants) cost nothing on any

@@ -11,9 +11,42 @@ from __future__ import annotations
 
 import io
 import os
+import time
 from typing import Callable, Optional
 
 import numpy as np
+
+
+def _fault_read(f, chunk_bytes: int, fault_log=None) -> bytes:
+    """One byte-window read behind the seeded chunk_io injection point
+    (`repro.core.faults`), with bounded exponential-backoff retry.
+
+    Transient IO errors — injected or real `OSError`s — are retried up
+    to `costmodel.max_retries()` times; the file position is untouched
+    by a failed attempt (injection fires *before* the read), so a
+    retry resumes the stream exactly where it left off. `fault_log`
+    (a `FaultLog`) meters injected/retries/backoff_s when given.
+    ``REPRO_FAULT_POLICY=off`` bypasses everything."""
+    from repro.core import costmodel, faults
+    if not faults.policy_enabled():
+        return f.read(chunk_bytes)
+    tries = costmodel.max_retries() + 1
+    for attempt in range(tries):
+        try:
+            faults.io_entry("read_csv_chunks")
+            return f.read(chunk_bytes)
+        except (OSError, faults.InjectedFault) as e:
+            if fault_log is not None and isinstance(e, faults.InjectedFault):
+                fault_log.injected += 1
+            if attempt + 1 >= tries:
+                raise
+            pause = costmodel.retry_backoff_s(attempt + 1)
+            if fault_log is not None:
+                fault_log.retries += 1
+                fault_log.backoff_s += pause
+            if pause > 0:
+                time.sleep(pause)
+    raise AssertionError("unreachable")  # pragma: no cover
 
 
 def write_csv(path: str, x: np.ndarray, fmt: str = "%.6g") -> int:
@@ -46,7 +79,7 @@ def read_csv(path: str, chunk_bytes: int = 64 << 20) -> np.ndarray:
 
 
 def read_csv_chunks(path: str, rows_per_chunk: int,
-                    chunk_bytes: int = 64 << 20):
+                    chunk_bytes: int = 64 << 20, fault_log=None):
     """Iterate a numeric CSV as `(row_offset, array)` chunks of exactly
     `rows_per_chunk` rows (the last one ragged) — the I/O twin of the
     out-of-core streaming executor: feed each yielded block to a
@@ -55,7 +88,13 @@ def read_csv_chunks(path: str, rows_per_chunk: int,
     Reads the file in byte windows (same newline-split recipe as
     `read_csv`) and re-blocks the parsed rows to the requested row
     bucket, so the byte window size and the chunk row count are
-    independent knobs."""
+    independent knobs.
+
+    Each byte-window read goes through the fault policy (`_fault_read`):
+    transient IO errors — injected via ``REPRO_FAULT_SPEC`` or real —
+    retry with bounded exponential backoff, metered into `fault_log`
+    when given, so a flaky source degrades to a slower stream instead
+    of a dead ingestion loop."""
     if rows_per_chunk < 1:
         raise ValueError(f"rows_per_chunk must be >= 1, got "
                          f"{rows_per_chunk}")
@@ -77,7 +116,7 @@ def read_csv_chunks(path: str, rows_per_chunk: int,
     with open(path, "rb") as f:
         rem = b""
         while True:
-            buf = f.read(chunk_bytes)
+            buf = _fault_read(f, chunk_bytes, fault_log)
             if not buf:
                 break
             buf = rem + buf

@@ -22,17 +22,38 @@ import numpy as np
 class StepMonitor:
     window: int = 64
     mad_k: float = 5.0
+    # history bound: long-lived consumers (the runtime's per-site RPC
+    # monitor, the serving dispatch monitor — see RuntimeStats.faults)
+    # record forever; percentiles cover recent history, memory stays flat
+    max_history: int = 4096
     times: list = field(default_factory=list)
     incidents: list = field(default_factory=list)
 
     def record(self, step: int, seconds: float) -> bool:
-        """Returns True if this step is a straggler."""
+        """Returns True if this step is a straggler.
+
+        Hot path — called once per serving dispatch / site RPC, so the
+        common (non-straggler) case is a slice + append + `sum()` over
+        the <=64-entry window; the median/MAD pair only runs when the
+        sample already clears the cheap mean guard (a straggler is
+        several sigma out, so it clears any reasonable mean too)."""
         hist = self.times[-self.window:]
         self.times.append(seconds)
-        if len(hist) < 8:
+        if len(self.times) >= 2 * self.max_history:
+            del self.times[:-self.max_history]
+        if len(self.incidents) >= 2 * self.max_history:
+            del self.incidents[:-self.max_history]
+        n = len(hist)
+        if n < 8:
             return False
-        med = float(np.median(hist))
-        mad = float(np.median(np.abs(np.array(hist) - med))) or 1e-9
+        if seconds <= 1.2 * (sum(hist) / n):
+            return False
+        srt = sorted(hist)
+        mid = n // 2
+        med = srt[mid] if n % 2 else 0.5 * (srt[mid - 1] + srt[mid])
+        dev = sorted(abs(t - med) for t in hist)
+        mad = (dev[mid] if n % 2 else 0.5 * (dev[mid - 1] + dev[mid])) \
+            or 1e-9
         if seconds > med + self.mad_k * mad and seconds > 1.2 * med:
             self.incidents.append(
                 {"step": step, "seconds": seconds, "median": med})

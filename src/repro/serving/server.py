@@ -63,8 +63,9 @@ from typing import Any, Optional, Sequence
 
 import numpy as np
 
-from repro.core import costmodel
+from repro.core import costmodel, faults
 from repro.core.batching import bucket_size, stack_requests
+from repro.core.faults import DeadlineExceededError, ServerClosedError
 from repro.core.jit_cache import get_jit_cache
 from repro.core.runtime import LineageRuntime, PreparedScript
 
@@ -81,20 +82,46 @@ class ScoreFuture:
     event loops keep several of these outstanding so the coalescer sees
     real concurrency without one OS thread per request."""
 
-    __slots__ = ("arrays", "done", "_result", "error", "t_enqueue")
+    __slots__ = ("arrays", "done", "_result", "error", "t_enqueue",
+                 "deadline", "_server")
 
-    def __init__(self, arrays: list[np.ndarray]):
+    def __init__(self, arrays: list[np.ndarray],
+                 deadline_us: Optional[float] = None,
+                 server: Optional["ModelServer"] = None):
         self.arrays = arrays
         self.done = threading.Event()
         self._result: Optional[list[np.ndarray]] = None
         self.error: Optional[BaseException] = None
         self.t_enqueue = time.monotonic()
+        # absolute monotonic deadline; expired requests are shed at
+        # dispatch entry (DeadlineExceededError), never mid-replay
+        self.deadline = (None if deadline_us is None
+                         else self.t_enqueue + float(deadline_us) * 1e-6)
+        self._server = server
 
     def result(self, timeout: Optional[float] = None) -> list[np.ndarray]:
         """Block until the request's coalesced batch has been dispatched
-        and return the per-request output list."""
-        if not self.done.is_set() and not self.done.wait(timeout):
-            raise TimeoutError(f"score timed out after {timeout}s")
+        and return the per-request output list.
+
+        Waits in short slices so a dead dispatcher surfaces as
+        `ServerClosedError` instead of an infinite hang — the wait ends
+        the moment the result lands either way."""
+        limit = None if timeout is None else time.monotonic() + timeout
+        while not self.done.is_set():
+            slice_s = 0.05
+            if limit is not None:
+                slice_s = min(slice_s, limit - time.monotonic())
+                if slice_s <= 0:
+                    raise TimeoutError(
+                        f"score timed out after {timeout}s")
+            if self.done.wait(max(slice_s, 1e-4)):
+                break
+            srv = self._server
+            if srv is not None and not srv._dispatcher_alive():
+                raise ServerClosedError(
+                    "serving dispatcher is gone (shutdown or "
+                    "unrecoverable crash) — request will never be "
+                    "dispatched")
         if self.error is not None:
             raise self.error
         return self._result  # type: ignore[return-value]
@@ -135,6 +162,9 @@ class ModelServer:
         self.max_wait_s = float(max_wait_us) * 1e-6
         self.queue_limit = int(queue_limit)
         self.adaptive = bool(adaptive)
+        # supervisor restart budget: crashes beyond this kill the
+        # dispatcher thread (persistent poison) instead of spinning
+        self.max_restarts = 64
 
         self._bplan = None
         self._inv_nodes: list = []
@@ -156,6 +186,10 @@ class ModelServer:
         self._inflight = 0          # batches issued, not yet delivered
         self._pending: Optional[_queue.Queue] = None
         self._worker: Optional[threading.Thread] = None
+        # fault policy: the batch popped but not yet handed off/
+        # dispatched — the supervisor fails exactly these futures when
+        # the coalescer crashes in that window, then restarts in-thread
+        self._popped: Optional[list[ScoreFuture]] = None
 
     # -- lifecycle -----------------------------------------------------
     def deploy(self) -> "ModelServer":
@@ -196,7 +230,7 @@ class ModelServer:
                 name="repro-serving-completer", daemon=True)
             self._worker.start()
         self._thread = threading.Thread(
-            target=self._coalesce_loop, name="repro-serving-coalescer",
+            target=self._run_dispatcher, name="repro-serving-coalescer",
             daemon=True)
         self._thread.start()
         self._deployed = True
@@ -222,6 +256,21 @@ class ModelServer:
             self._worker.join()
             self._worker = None
             self._pending = None
+        # a clean coalescer exit drains the queue first, so leftovers
+        # exist only when the dispatcher died unrecoverably (policy
+        # off) — deliver a terminal error rather than leaving waiters
+        # to hang / poll out
+        leftover: list[ScoreFuture] = []
+        with self._cv:
+            while self._queue:
+                leftover.append(self._queue.popleft())
+        if leftover:
+            err = ServerClosedError(
+                "server shut down before this request was dispatched")
+            for req in leftover:
+                if not req.done.is_set():
+                    req.error = err
+                    req.done.set()
         get_jit_cache().unpin_all(self._pinned_keys)
         self._pinned_keys = set()
         if self._bplan is not None:
@@ -235,17 +284,26 @@ class ModelServer:
         self.shutdown()
 
     # -- request path --------------------------------------------------
-    def submit(self, *arrays) -> ScoreFuture:
+    def submit(self, *arrays,
+               deadline_us: Optional[float] = None) -> ScoreFuture:
         """Enqueue one request without blocking on its result.
 
         Validates against the declared arg shapes/dtypes, applies
         backpressure (`QueueFullError` at `queue_limit`), and returns a
         `ScoreFuture` — pipelining clients keep several outstanding so
-        coalescing happens without one blocked thread per request."""
+        coalescing happens without one blocked thread per request.
+
+        `deadline_us` sets a per-request deadline: a request still
+        queued when it expires is shed at dispatch entry with
+        `DeadlineExceededError` (counted in `RuntimeStats.faults.shed`)
+        instead of wasting a padded lane on an answer nobody is waiting
+        for. A request whose batch has reached the device always
+        delivers its (possibly late) result — shed before dispatch,
+        never after."""
         if not self._deployed:
             raise RuntimeError("ModelServer.submit before deploy()")
         validated = self.script.validate_args(arrays, exact_shapes=True)
-        req = ScoreFuture(validated)
+        req = ScoreFuture(validated, deadline_us=deadline_us, server=self)
         log = self.runtime.stats.serving
         with self._cv:
             if len(self._queue) >= self.queue_limit:
@@ -268,16 +326,19 @@ class ModelServer:
                 self._cv.notify_all()
         return req
 
-    def score(self, *arrays, timeout: Optional[float] = None
-              ) -> list[np.ndarray]:
+    def score(self, *arrays, timeout: Optional[float] = None,
+              deadline_us: Optional[float] = None) -> list[np.ndarray]:
         """Score one request. Blocks until its coalesced batch has been
         dispatched and returns the per-request output list, bitwise
         what a solo `script(*arrays)` run computes.
 
         Raises `QueueFullError` when the bounded queue is at
-        `queue_limit` (backpressure) and `TimeoutError` when `timeout`
-        seconds elapse first."""
-        return self.submit(*arrays).result(timeout)
+        `queue_limit` (backpressure), `TimeoutError` when `timeout`
+        seconds elapse first, `DeadlineExceededError` when
+        `deadline_us` expires while still queued, and
+        `ServerClosedError` when the dispatcher is gone."""
+        return self.submit(*arrays,
+                           deadline_us=deadline_us).result(timeout)
 
     def flush(self) -> None:
         """Dispatch everything queued right now — skipping any pending
@@ -291,6 +352,57 @@ class ModelServer:
                 or (self._stop and self._thread is None))
 
     # -- coalescer -----------------------------------------------------
+    def _dispatcher_alive(self) -> bool:
+        """True while the dispatch machinery can still deliver queued
+        requests (`ScoreFuture.result` polls this instead of hanging
+        on a dead dispatcher): the coalescer thread, plus the
+        completion worker when pipelined."""
+        t = self._thread
+        if t is None or not t.is_alive():
+            return False
+        w = self._worker
+        return w is None or w.is_alive()
+
+    def _run_dispatcher(self) -> None:
+        """Dispatcher thread target: `_coalesce_loop` under a
+        supervisor. A coalescer crash (injected `serving_dispatch`
+        faults, or a real bug in the pop→dispatch window) fails ONLY
+        the batch it had popped — queued and in-flight requests are
+        untouched — then restarts the loop in-thread, so repeated
+        crash/recover cycles leak zero threads. With the policy off
+        the error is delivered and the thread dies raw (pre-policy
+        behaviour); waiters then surface `ServerClosedError` via the
+        liveness poll. Restarts are capped (`max_restarts`) so a
+        *persistent* poison — one that crashes every restart — kills
+        the thread instead of spinning hot forever."""
+        crashes = 0
+        while True:
+            try:
+                self._coalesce_loop()
+                return  # clean shutdown
+            except BaseException as e:
+                with self._cv:
+                    batch, self._popped = self._popped, None
+                    if batch:
+                        # undo the pop-time state so flush()/shutdown
+                        # cannot wedge on a batch that will never run
+                        if self._pipelined:
+                            self._inflight -= 1
+                        else:
+                            self._busy = False
+                    self._cv.notify_all()
+                for req in batch or []:
+                    if not req.done.is_set():
+                        req.error = e
+                        req.done.set()
+                crashes += 1
+                if not faults.policy_enabled() or crashes > self.max_restarts:
+                    raise
+                flog = self.runtime.stats.faults
+                if isinstance(e, faults.InjectedFault):
+                    flog.injected += 1
+                flog.restarts += 1
+
     def _wait_budget_s(self, k: int) -> float:
         """How long holding k queued requests for one more is worth."""
         if not self.adaptive:
@@ -344,6 +456,12 @@ class ModelServer:
                     self._inflight += 1
                 else:
                     self._busy = True
+                # the supervisor's responsibility window opens here:
+                # these futures are off the queue but not yet owned by
+                # a dispatch (which delivers errors itself)
+                self._popped = batch if batch else None
+            if batch:
+                faults.dispatch_entry()  # injected coalescer crash
             if self._pipelined:
                 # issue stage: stack batch N+1's bindings while the
                 # worker replays batch N (the put blocks only when a
@@ -353,11 +471,14 @@ class ModelServer:
                     [r.arrays for r in batch],
                     len(self.script._arg_shapes))
                 self._pending.put((batch, stacked))
+                with self._cv:
+                    self._popped = None  # the worker owns delivery now
             else:
                 try:
                     self._dispatch(batch)
                 finally:
                     with self._cv:
+                        self._popped = None
                         self._busy = False
                         self._cv.notify_all()
 
@@ -380,6 +501,27 @@ class ModelServer:
 
     def _dispatch(self, batch: list[ScoreFuture],
                   stacked: Optional[list[np.ndarray]] = None) -> None:
+        if batch and faults.policy_enabled():
+            # deadline shedding — at dispatch ENTRY only: an expired
+            # request is answered DeadlineExceededError instead of
+            # burning a padded lane on a result nobody waits for; once
+            # the (possibly pre-stacked) batch proceeds to the device
+            # every survivor delivers, late or not
+            flog = self.runtime.stats.faults
+            now = time.monotonic()
+            live = [r for r in batch
+                    if r.deadline is None or now <= r.deadline]
+            if len(live) != len(batch):
+                err = DeadlineExceededError(
+                    "request deadline expired while queued; shed "
+                    "before dispatch")
+                for r in batch:
+                    if r not in live and not r.done.is_set():
+                        flog.shed += 1
+                        r.error = err
+                        r.done.set()
+                batch = live
+                stacked = None  # pre-stacked bindings no longer match
         k = len(batch)
         if k == 0:
             return
@@ -409,7 +551,12 @@ class ModelServer:
                     req.error = e
                     req.done.set()
         finally:
-            log.busy_s += time.monotonic() - t0
+            dt = time.monotonic() - t0
+            log.busy_s += dt
+            # per-dispatch latency through the rescued straggler
+            # monitor (repro.distributed.fault.StepMonitor): p50/p99
+            # and median+k·MAD flags surface in stats['faults']
+            self.runtime.stats.faults.record_dispatch(log.batches, dt)
 
     # -- introspection -------------------------------------------------
     def explain(self) -> str:

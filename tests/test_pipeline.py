@@ -15,10 +15,12 @@ The contract under test:
     bindings, reuse-cache entries and probe-hit values survive any
     number of donating runs, and donated executables live under a
     separate `|don:`-suffixed jit-cache key;
-  * a prefetch-worker error propagates to the caller and the worker is
-    joined — no hung threads, no silently dropped buckets; same for
-    the serving completion worker, where `QueueFullError` backpressure
-    keeps working while a batch is in flight.
+  * a prefetch-worker error is absorbed by the fault policy — the
+    worker is joined and the stream finishes on the synchronous chunk
+    loop with the exact answer (`REPRO_FAULT_POLICY=off` restores raw
+    propagation) — no hung threads, no silently dropped buckets; the
+    serving completion worker keeps `QueueFullError` backpressure
+    working while a batch is in flight.
 """
 import threading
 import time
@@ -264,17 +266,46 @@ def test_batched_dispatches_never_donate(rng, monkeypatch):
 # prefetch-worker error propagation
 # ---------------------------------------------------------------------------
 
-def test_prefetch_error_propagates_and_joins_worker(rng, monkeypatch):
-    monkeypatch.setattr(costmodel, "CHUNK_MEM_BUDGET", BUDGET)
-    monkeypatch.setenv("REPRO_PIPELINE_DEPTH", "2")
-    real = rt_mod._reuse_nbytes
-
+def _boom_on_prefetch(real):
     def boom(a):
         if threading.current_thread().name.startswith("chunk-prefetch"):
             raise RuntimeError("prefetch boom")
         return real(a)
+    return boom
 
-    monkeypatch.setattr(rt_mod, "_reuse_nbytes", boom)
+
+def test_prefetch_error_degrades_to_sync_tail(rng, monkeypatch):
+    # Under the default fault policy a prefetch-worker crash is not
+    # fatal: the runtime cancels queued preps, joins the worker, and
+    # finishes the stream on the synchronous chunk loop (PR 10).
+    monkeypatch.setattr(costmodel, "CHUNK_MEM_BUDGET", BUDGET)
+    monkeypatch.setenv("REPRO_PIPELINE_DEPTH", "2")
+    real = rt_mod._reuse_nbytes
+    monkeypatch.setattr(rt_mod, "_reuse_nbytes", _boom_on_prefetch(real))
+    Xh, yh = rng.normal(size=(4096, 8)), rng.normal(size=(4096,))
+    rt = LineageRuntime(cache=None, fuse=True)
+    got = _lm_run(rt, Xh, yh)
+    assert np.abs(got - _lm_ref(Xh, yh).ravel()).max() < 1e-10
+    assert rt.stats.faults.degradations == 1
+    # clean shutdown: queued preps cancelled, worker joined
+    assert _no_prefetch_threads()
+    # and the runtime is not poisoned: the next run (healthy worker)
+    # streams pipelined again to the same answer
+    monkeypatch.setattr(rt_mod, "_reuse_nbytes", real)
+    again = _lm_run(rt, Xh, yh)
+    assert np.abs(again - _lm_ref(Xh, yh).ravel()).max() < 1e-10
+    assert rt.stats.faults.degradations == 1  # healthy run added none
+    assert _no_prefetch_threads()
+
+
+def test_prefetch_error_propagates_with_policy_off(rng, monkeypatch):
+    # REPRO_FAULT_POLICY=off restores the PR-9 contract: the worker
+    # error propagates to the caller and the worker is joined.
+    monkeypatch.setenv("REPRO_FAULT_POLICY", "off")
+    monkeypatch.setattr(costmodel, "CHUNK_MEM_BUDGET", BUDGET)
+    monkeypatch.setenv("REPRO_PIPELINE_DEPTH", "2")
+    real = rt_mod._reuse_nbytes
+    monkeypatch.setattr(rt_mod, "_reuse_nbytes", _boom_on_prefetch(real))
     Xh, yh = rng.normal(size=(4096, 8)), rng.normal(size=(4096,))
     rt = LineageRuntime(cache=None, fuse=True)
     with pytest.raises(RuntimeError, match="prefetch boom"):
